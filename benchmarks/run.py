@@ -1,0 +1,54 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows; artifacts land in
+results/bench/*.json. Additionally summarises the dry-run/roofline sweeps
+when their JSONL outputs exist."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import paper_figs  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def roofline_rows():
+    """Summarise the dry-run roofline sweep (if present)."""
+    path = os.path.join(RESULTS, "roofline_results.jsonl")
+    if not os.path.exists(path):
+        return [("roofline_sweep", 0.0, "missing_run_dryrun_first")]
+    from repro.launch.roofline import roofline_terms
+    rows = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") != "ok":
+                continue
+            t = roofline_terms(r, 256)
+            rows.append((
+                f"roofline_{r['arch']}_{r['shape']}",
+                r.get("wall_s", 0.0) * 1e6,
+                f"dom={t['dominant']}_frac={t['roofline_fraction']:.3f}",
+            ))
+    return rows or [("roofline_sweep", 0.0, "no_ok_rows")]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in paper_figs.ALL:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+    for name, us, derived in roofline_rows():
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Serve a model whose weights exceed the device budget: SVM weight
+streaming with batched decode requests, comparing the paper-faithful
+demand-paging baseline against SVM-aware serving (pinning + overlapped
+prefetch) and policy alternatives.
+
+    PYTHONPATH=src python examples/serve_streaming.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.svm import StreamingExecutor
+from repro.svm.executor import run_layer_stream
+
+
+def main() -> None:
+    from repro.models.config import ATTN, MLP
+    n_layers = 12
+    # pattern longer than n_layers => every layer is an unstacked
+    # "remainder" layer with its own leaves — the natural streaming unit
+    cfg = dataclasses.replace(
+        get_reduced("granite-3-2b"), n_layers=n_layers, d_model=256,
+        d_ff=1024, layer_pattern=(ATTN,) * (n_layers + 1),
+        ffn_pattern=(MLP,) * (n_layers + 1))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(params))
+    budget = int(total * 0.55)          # DOS ~ 180%
+    print(f"weights {total/1e6:.1f}MB, device budget {budget/1e6:.1f}MB "
+          f"(DOS {total/budget*100:.0f}%)  batch=8 decode, 6 steps")
+
+    flat = ["/".join(str(getattr(k, 'key', k)) for k in kp)
+            for kp, _ in jax.tree_util.tree_leaves_with_path(params)]
+    layer_paths = [["embed"]] + [
+        sorted(p for p in flat if p.startswith(f"remainder/r{i}/"))
+        for i in range(n_layers)] + [["embed"]]   # tied head re-read
+
+    flops_per_layer = 8 * 8 * cfg.d_model * cfg.d_ff * 3
+
+    def apply_layer(i, tensors):
+        _ = [t.block_until_ready() for t in tensors.values()]
+        return float(flops_per_layer)
+
+    # the paper's §4.2 hybrid placement: pin the layers that fit, access
+    # the remainder via zero-copy — no demand-paging cycle at all
+    pin_half = tuple(f"remainder/r{i}/" for i in range(5)) + ("embed",)
+    zc_half = tuple(f"remainder/r{i}/" for i in range(5, n_layers))
+
+    rows = []
+    for label, kw in (
+        ("naive_lrf", {}),
+        ("clock", {"policy": "clock"}),
+        ("aware_pin+prefetch", {"prefetch": True, "pin": ("embed",)}),
+        ("hybrid_pin+zerocopy", {"pin": pin_half, "zero_copy": zc_half}),
+    ):
+        ex = StreamingExecutor(params, budget, **kw)
+        m = run_layer_stream(ex, layer_paths, apply_layer, steps=6)
+        rows.append((label, m))
+        print(f"  {label:22s} wall={m['wall_s']*1e3:8.2f}ms "
+              f"migs={m['migrations']:4d} evicts={m['evictions']:4d} "
+              f"e2m={m['evict_to_mig']:.2f}")
+
+    base = rows[0][1]["wall_s"]
+    best = min(rows, key=lambda r: r[1]["wall_s"])
+    print(f"best: {best[0]} — {base/best[1]['wall_s']:.2f}x over naive LRF "
+          f"demand paging (the paper's §4 mitigations, on weights)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: range-granular shared virtual memory (SVM) for oversubscribed
+JAX training/serving — reproduction + TPU adaptation of Cooper, Scogland &
+Ge, "Shared Virtual Memory: Its Design and Performance Implications for
+Diverse Applications" (ICS'24).
+
+Import-light by design: subpackages import jax lazily so launch/dryrun can
+set XLA flags before backend initialisation."""
+
+__version__ = "1.0.0"

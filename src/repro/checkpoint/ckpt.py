@@ -1,0 +1,156 @@
+"""Checkpointing: pytree save/restore with atomic step directories, async
+writes, and retention. Multi-host posture: each process writes only its own
+param shards (`shard_id`), manifests are msgpack, and a step is committed by
+an atomic rename — a crash mid-write never corrupts the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any
+
+import msgpack
+import numpy as np
+
+import jax
+
+PyTree = Any
+
+_MANIFEST = "manifest.msgpack"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    out = {}
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        path = "/".join(
+            getattr(k, "key", getattr(k, "name", str(k))) for k in kp)
+        out[path] = np.asarray(leaf)
+    return out
+
+
+def _to_storable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """numpy's savez can't serialise ml_dtypes (bfloat16 etc.) — store the
+    raw bits as uint16/uint8 and record the logical dtype."""
+    name = arr.dtype.name
+    if name == "bfloat16":
+        return arr.view(np.uint16), name
+    if name.startswith("float8"):
+        return arr.view(np.uint8), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, name: str) -> np.ndarray:
+    if name == "bfloat16":
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    if name.startswith("float8"):
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, name))
+    return arr
+
+
+def save(root: str, step: int, tree: PyTree, *, shard_id: int = 0) -> str:
+    """Write `tree` under root/step_<step>; atomic via tmp+rename."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + f".tmp{shard_id}"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {}
+    stored = {}
+    for i, (k, v) in enumerate(flat.items()):
+        sv, logical = _to_storable(v)
+        stored[str(i)] = sv
+        manifest[k] = {"idx": i, "shape": list(v.shape), "dtype": logical}
+    with open(os.path.join(tmp, f"shard{shard_id}.npz"), "wb") as f:
+        np.savez(f, **stored)
+    with open(os.path.join(tmp, _MANIFEST), "wb") as f:
+        f.write(msgpack.packb({"step": step, "leaves": manifest,
+                               "shard": shard_id}))
+    os.replace(tmp, final) if not os.path.exists(final) else _merge(tmp, final)
+    return final
+
+
+def _merge(tmp: str, final: str) -> None:
+    for name in os.listdir(tmp):
+        os.replace(os.path.join(tmp, name), os.path.join(final, name))
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def restore(root: str, step: int, like: PyTree, *, shard_id: int = 0
+            ) -> PyTree:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, _MANIFEST), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(d, f"shard{shard_id}.npz"))
+    flat_like = _flatten(like)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for (path, ref), leaf in zip(flat_like.items(), leaves):
+        meta = manifest["leaves"][path]
+        arr = _from_storable(data[str(meta["idx"])], meta["dtype"])
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(
+                f"checkpoint mismatch at {path}: {arr.shape} vs {ref.shape}")
+        out.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(root)
+             if n.startswith("step_") and not n.endswith(".tmp0")
+             and "." not in n.split("_")[1]]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async, retained checkpointing for the train loop."""
+
+    def __init__(self, root: str, *, keep: int = 3, every: int = 100):
+        self.root = root
+        self.keep = keep
+        self.every = every
+        self._thread: threading.Thread | None = None
+
+    def maybe_save(self, step: int, tree: PyTree, *, blocking: bool = False
+                   ) -> bool:
+        if step % self.every != 0:
+            return False
+        self.wait()
+        # snapshot to host memory before returning control to the step loop
+        snap = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save(self.root, step, snap)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        return True
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (
+            int(n.split("_")[1]) for n in os.listdir(self.root)
+            if n.startswith("step_") and "." not in n.split("_", 1)[1]))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: PyTree) -> tuple[int, PyTree] | None:
+        self.wait()
+        step = latest_step(self.root)
+        if step is None:
+            return None
+        return step, restore(self.root, step, like)

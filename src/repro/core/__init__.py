@@ -1,0 +1,41 @@
+"""Core SVM model: ranges, policies, cost model, driver state machine,
+discrete-event simulator, and the paper's workload traces."""
+
+from repro.core.costmodel import (
+    CostParams,
+    CostVector,
+    MI250X,
+    TPU_V5E_HOST,
+    eviction_cost,
+    migration_cost,
+    zerocopy_cost,
+)
+from repro.core.policies import LRF, LRU, Clock, RandomPolicy, make_policy
+from repro.core.ranges import (
+    GB,
+    KB,
+    MB,
+    PAGE,
+    AddressSpace,
+    Allocation,
+    Range,
+    pow2_floor,
+    split_allocation,
+    svm_alignment,
+)
+from repro.core.simulator import RunResult, Workload, apply_trace, dos_sweep, simulate
+from repro.core.svm import DensitySample, Event, SVMManager
+from repro.core.traces import WORKLOADS, make_workload
+from repro.core.uvm import UVMManager, VABLOCK
+
+__all__ = [
+    "AddressSpace", "Allocation", "Range", "pow2_floor", "split_allocation",
+    "svm_alignment", "GB", "MB", "KB", "PAGE",
+    "CostParams", "CostVector", "MI250X", "TPU_V5E_HOST",
+    "migration_cost", "eviction_cost", "zerocopy_cost",
+    "LRF", "LRU", "Clock", "RandomPolicy", "make_policy",
+    "SVMManager", "Event", "DensitySample",
+    "UVMManager", "VABLOCK",
+    "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
+    "WORKLOADS", "make_workload",
+]

@@ -1,0 +1,154 @@
+"""Discrete-event simulation of workloads against the SVM driver model.
+
+A *workload* builds its managed allocations in an AddressSpace and yields a
+lazy trace of ops; the simulator applies them to an SVMManager and collects
+the paper's metrics (wall time, throughput, migration/eviction profiles,
+fault densities, cost breakdown).
+
+Op vocabulary (tuples, for speed):
+  ("touch", rid, concurrency, page_hint)  — kernel accesses range rid
+  ("compute", seconds)                    — pure device compute
+  ("writeback", rid)                      — algorithmic device→host copy
+  ("pin", rid) / ("unpin", rid)           — app-directed placement (§4.1)
+  ("kernel", name)                        — kernel-boundary marker
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+from repro.core.costmodel import CostParams, MI250X
+from repro.core.ranges import GB, AddressSpace
+from repro.core.svm import SVMManager
+
+Op = tuple
+
+
+@dataclasses.dataclass
+class RunResult:
+    workload: str
+    dos: float
+    wall_s: float
+    work_units: float
+    throughput: float          # work_units / wall_s
+    summary: dict
+    manager: SVMManager
+
+    def row(self) -> dict:
+        r = {"workload": self.workload, "dos": round(self.dos, 1),
+             "throughput": self.throughput}
+        r.update({k: v for k, v in self.summary.items()
+                  if k != "cost_breakdown"})
+        return r
+
+
+class Workload:
+    """Base class: subclasses define allocations + access trace + work."""
+
+    name = "workload"
+    concurrency = 32          # in-flight page requests => fault density
+    kernel_markers = True
+
+    def __init__(self, total_bytes: int):
+        self.total_bytes = int(total_bytes)
+
+    def build(self, space: AddressSpace) -> None:
+        raise NotImplementedError
+
+    def trace(self, space: AddressSpace) -> Iterator[Op]:
+        raise NotImplementedError
+
+    def work_units(self) -> float:
+        """Useful work (bytes or flops) for throughput normalisation."""
+        return float(self.total_bytes)
+
+
+def simulate(
+    workload: Workload,
+    capacity_bytes: int = 64 * GB,
+    *,
+    base: int = 175 * 1024 * 1024,
+    params: CostParams = MI250X,
+    policy: str = "lrf",
+    profile: bool = True,
+    max_ops: int | None = None,
+    manager_cls=SVMManager,
+    zero_copy_alloc_names: tuple = (),
+    **mgr_kwargs,
+) -> RunResult:
+    space = AddressSpace(capacity_bytes, base=base)
+    workload.build(space)
+    mgr = manager_cls(space, policy=policy, params=params, profile=profile,
+                      **mgr_kwargs)
+    for a in space.allocations:
+        if a.name in zero_copy_alloc_names:
+            mgr.set_zero_copy(a.alloc_id)
+    apply_trace(mgr, workload.trace(space), max_ops=max_ops)
+    wall = max(mgr.wall, 1e-12)
+    return RunResult(
+        workload=workload.name,
+        dos=space.dos(),
+        wall_s=mgr.wall,
+        work_units=workload.work_units(),
+        throughput=workload.work_units() / wall,
+        summary=mgr.summary(),
+        manager=mgr,
+    )
+
+
+def apply_trace(mgr: SVMManager, trace: Iterable[Op],
+                max_ops: int | None = None) -> None:
+    n = 0
+    for op in trace:
+        tag = op[0]
+        if tag == "touch":
+            _, rid, conc, hint = op
+            mgr.touch(rid, concurrency=conc, page_hint=hint)
+        elif tag == "compute":
+            mgr.advance(op[1])
+        elif tag == "writeback":
+            mgr.writeback(op[1])
+        elif tag == "pin":
+            mgr.pin(op[1])
+        elif tag == "unpin":
+            mgr.unpin(op[1])
+        elif tag == "kernel":
+            pass
+        else:
+            raise ValueError(f"unknown trace op {tag!r}")
+        n += 1
+        if max_ops is not None and n >= max_ops:
+            break
+
+
+def dos_sweep(
+    make_workload,
+    dos_values: Iterable[float],
+    capacity_bytes: int = 64 * GB,
+    *,
+    normalize_at: float = 78.0,
+    policy: str = "lrf",
+    params: CostParams = MI250X,
+    **mgr_kwargs,
+) -> list[dict]:
+    """Run a workload at several problem sizes (expressed as target DOS %)
+    and report throughput normalised to the `normalize_at` point
+    (paper Fig. 6)."""
+    rows = []
+    base_thr = None
+    for dos in list(dos_values):
+        wl = make_workload(int(capacity_bytes * dos / 100.0))
+        res = simulate(wl, capacity_bytes, policy=policy, params=params,
+                       profile=False, **mgr_kwargs)
+        row = res.row()
+        rows.append(row)
+        if abs(dos - normalize_at) < 1e-9:
+            base_thr = res.throughput
+    if base_thr is None:  # fall back to the first point
+        wl = make_workload(int(capacity_bytes * normalize_at / 100.0))
+        base_thr = simulate(wl, capacity_bytes, policy=policy, params=params,
+                            profile=False, **mgr_kwargs).throughput
+    for row in rows:
+        row["norm_perf"] = row["throughput"] / base_thr
+    return rows

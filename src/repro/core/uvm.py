@@ -1,0 +1,200 @@
+"""UVM-style baseline manager (paper Table 1 comparison).
+
+Models the NVIDIA-UVM design points the paper contrasts with SVM:
+
+  * UM (de)allocation in 2 MB **VABlocks** (vs SVM ranges up to 1 GB),
+  * migration unit: 64 KB base pages, coalesced up to a VABlock by a
+    density/tree prefetcher (contiguous faulting blocks in one batch are
+    migrated as one transfer),
+  * **fault batching**: up to 256 faults buffered and serviced together
+    (vs SVM's immediate single-fault servicing),
+  * eviction at VABlock granularity (LRU over blocks).
+
+Exposes the same trace-facing API as SVMManager (`touch`, `advance`,
+`writeback`, `pin`, `summary`) so the simulator can drive either.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from repro.core.costmodel import CostParams, CostVector, MI250X, migration_cost
+from repro.core.ranges import AddressSpace, MB
+from repro.core.svm import Event
+
+VABLOCK = 2 * MB
+BASE_CHUNK = 64 * 1024
+MAX_BATCH = 256
+
+BATCH_FIXED_S = 45e-6     # GPU->host interrupt + batch preprocessing
+PER_FAULT_S = 2.5e-6      # per-fault decode/dedupe within a batch
+
+
+class UVMManager:
+    def __init__(
+        self,
+        space: AddressSpace,
+        *,
+        params: CostParams = MI250X,
+        profile: bool = True,
+        prefetch: bool = True,
+        **_ignored,
+    ) -> None:
+        self.space = space
+        self.params = params
+        self.profile = profile
+        self.prefetch = prefetch
+        self.capacity = space.capacity
+        self.free = space.capacity
+        # resident VABlocks: block_id -> last-use time (LRU)
+        self.resident: OrderedDict[int, float] = OrderedDict()
+        self.pinned: set[int] = set()
+
+        self.wall = 0.0
+        self.compute_time = 0.0
+        self.cost = CostVector()
+        self.n_migrations = 0      # transfers (after coalescing)
+        self.n_evictions = 0
+        self.n_batches = 0
+        self.bytes_migrated = 0
+        self.bytes_evicted = 0
+        self.faults_serviceable = 0
+        self.faults_duplicate = 0
+        self.trigger_pages: set[int] = set()
+        self.events: list[Event] = []
+        self.density: list = []
+        self._batch: list[int] = []   # pending faulting block ids
+
+    # -------------------------------------------------------------- helpers
+
+    def _blocks_of_range(self, rid: int) -> range:
+        r = self.space.ranges[rid]
+        return range(r.start // VABLOCK, -(-r.end // VABLOCK))
+
+    # ------------------------------------------------------------------ api
+
+    def touch(self, rid: int, *, bytes_touched: int | None = None,
+              concurrency: int = 32, page_hint: int | None = None,
+              write: bool = False) -> bool:
+        hit = True
+        for b in self._blocks_of_range(rid):
+            if b in self.resident:
+                self.resident.move_to_end(b)
+                self.resident[b] = self.wall
+            else:
+                hit = False
+                self._batch.append(b)
+                self.faults_serviceable += 1
+                self.trigger_pages.add(b * (VABLOCK // 4096))
+                self.faults_duplicate += max(0, concurrency // 8)
+                if len(self._batch) >= MAX_BATCH:
+                    self._service_batch()
+        self._service_batch()
+        return hit
+
+    def advance(self, seconds: float) -> None:
+        self.wall += seconds
+        self.compute_time += seconds
+
+    def writeback(self, rid: int) -> None:
+        for b in self._blocks_of_range(rid):
+            if b in self.resident:
+                self._evict(b)
+
+    def pin(self, rid: int) -> None:
+        self.touch(rid, concurrency=1)
+        for b in self._blocks_of_range(rid):
+            self.pinned.add(b)
+            self.resident.pop(b, None)  # memory accounting unchanged
+
+    def unpin(self, rid: int) -> None:
+        for b in self._blocks_of_range(rid):
+            if b in self.pinned:
+                self.pinned.discard(b)
+                self.resident[b] = self.wall
+
+    # ------------------------------------------------------------ internals
+
+    def _service_batch(self) -> None:
+        if not self._batch:
+            return
+        blocks = sorted(set(self._batch))
+        self._batch.clear()
+        self.n_batches += 1
+        self.wall += BATCH_FIXED_S + PER_FAULT_S * len(blocks)
+        # tree/density prefetcher: coalesce contiguous faulting blocks
+        groups: list[list[int]] = [[blocks[0]]]
+        for b in blocks[1:]:
+            if self.prefetch and b == groups[-1][-1] + 1:
+                groups[-1].append(b)
+            else:
+                groups.append([b])
+        for g in groups:
+            nbytes = len(g) * VABLOCK
+            # make room at VABlock granularity (LRU)
+            while self.free < nbytes:
+                victim = self._lru_victim()
+                self._evict(victim)
+            mc = migration_cost(nbytes, self.params)
+            self.cost.add(mc)
+            self.wall += mc.total()
+            self.n_migrations += 1
+            self.bytes_migrated += nbytes
+            for b in g:
+                self.resident[b] = self.wall
+            self.free -= nbytes
+            if self.profile:
+                rid = self._rid_of_block(g[0])
+                self.events.append(Event(self.wall, "mig", rid,
+                                         self.space.ranges[rid].alloc_id,
+                                         nbytes))
+
+    def _rid_of_block(self, b: int) -> int:
+        addr = min(b * VABLOCK, self.space.ranges[-1].end - 1)
+        addr = max(addr, self.space.ranges[0].start)
+        return self.space.range_at(addr).rid
+
+    def _lru_victim(self) -> int:
+        for b in self.resident:
+            if b not in self.pinned:
+                return b
+        raise RuntimeError("UVM: all resident blocks pinned")
+
+    def _evict(self, b: int) -> None:
+        mc = migration_cost(VABLOCK, self.params).total()
+        self.cost.alloc += mc
+        self.wall += mc
+        self.resident.pop(b, None)
+        self.free += VABLOCK
+        self.n_evictions += 1
+        self.bytes_evicted += VABLOCK
+        if self.profile:
+            rid = self._rid_of_block(b)
+            self.events.append(Event(self.wall, "evt", rid,
+                                     self.space.ranges[rid].alloc_id, VABLOCK))
+
+    # ------------------------------------------------------------- metrics
+
+    @property
+    def faults_total(self) -> int:
+        return self.faults_serviceable + self.faults_duplicate
+
+    @property
+    def evict_to_mig_ratio(self) -> float:
+        return self.n_evictions / self.n_migrations if self.n_migrations else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "wall_s": self.wall,
+            "compute_s": self.compute_time,
+            "migrations": self.n_migrations,
+            "evictions": self.n_evictions,
+            "batches": self.n_batches,
+            "evict_to_mig": self.evict_to_mig_ratio,
+            "bytes_migrated": self.bytes_migrated,
+            "bytes_evicted": self.bytes_evicted,
+            "faults_serviceable": self.faults_serviceable,
+            "faults_duplicate": self.faults_duplicate,
+            "cost_breakdown": self.cost.as_dict(),
+            "dos": self.space.dos(),
+        }

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    MemmapTokens,
+    SyntheticLM,
+    batch_iterator,
+    modality_stub,
+)
+
+__all__ = ["SyntheticLM", "MemmapTokens", "batch_iterator", "modality_stub"]

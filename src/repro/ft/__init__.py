@@ -1,0 +1,9 @@
+from repro.ft.supervisor import (
+    ElasticPlan,
+    StragglerMonitor,
+    TrainSupervisor,
+    plan_elastic_remesh,
+)
+
+__all__ = ["TrainSupervisor", "StragglerMonitor", "plan_elastic_remesh",
+           "ElasticPlan"]

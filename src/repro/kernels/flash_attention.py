@@ -1,0 +1,102 @@
+"""Causal flash-attention forward Pallas kernel (32k-prefill hot spot).
+
+Grid (batch*heads, q_blocks, kv_blocks); kv innermost so the running
+(max, denom, accumulator) state lives in VMEM scratch across kv steps —
+the S×T score matrix never touches HBM. Causal masking is positional via
+iota; fully-masked kv blocks still execute (static grid) but contribute
+zeros, matching the XLA-blockwise reference semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ, BKV = 256, 256
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, nkv: int, bq: int, bkv: int, scale: float,
+                  causal: bool, T: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bkv, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    kpos = t * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kpos < T                                   # OOB kv padding
+    if causal:
+        i = pl.program_id(1)
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        mask &= kpos <= qpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    # zero-fill padded v rows: OOB VMEM rows are unspecified (NaN in
+    # interpret mode) and even a p==0 coefficient would poison the dot
+    # (0 * NaN = NaN in the MXU accumulation)
+    vrow = t * bkv + jax.lax.broadcasted_iota(jnp.int32, v_ref[0].shape, 0)
+    v_clean = jnp.where(vrow < T, v_ref[0], 0).astype(v_ref.dtype)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(
+                        p.astype(v_clean.dtype), v_clean,
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(t == nkv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True,
+                           interpret: bool = False) -> jax.Array:
+    """q,k,v: (B,H,S,D) (pre-repeated KV heads; D a 128-multiple ideally)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    bq, bkv = min(BQ, S), min(BKV, T)
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, T, D)
+    vf = v.reshape(B * H, T, D)
+    grid = (B * H, pl.cdiv(S, bq), pl.cdiv(T, bkv))
+    kern = functools.partial(
+        _flash_kernel, nkv=grid[2], bq=bq, bkv=bkv,
+        scale=D ** -0.5, causal=causal, T=T)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, t: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, t: (b, t, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, t: (b, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, t: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are validated against in interpret mode, shape/dtype-swept)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def triad_ref(b: jax.Array, c: jax.Array, alpha: float) -> jax.Array:
+    """STREAM triad: a = b + alpha * c."""
+    return b + alpha * c
+
+
+def jacobi2d_ref(a: jax.Array) -> jax.Array:
+    """One 5-point Jacobi sweep; boundary rows/cols pass through."""
+    interior = 0.2 * (a[1:-1, 1:-1] + a[:-2, 1:-1] + a[2:, 1:-1]
+                      + a[1:-1, :-2] + a[1:-1, 2:])
+    return a.at[1:-1, 1:-1].set(interior.astype(a.dtype))
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with fp32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: (B,H,S,D) -> (B,H,S,D). Plain softmax attention."""
+    S, T = q.shape[-2], k.shape[-2]
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(v.dtype), v)
+
+
+def mamba_scan_ref(dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+                   x: jax.Array) -> jax.Array:
+    """Selective-scan oracle (sequential over time, fp32 state).
+
+    dt, x: (Bt, S, D); A: (D, N); B, C: (Bt, S, N)  ->  y: (Bt, S, D)
+        h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ;  y_t = C_t . h_t
+    """
+    Bt, S, D = x.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        a = jnp.exp(dt_t[..., None] * A)              # (Bt, D, N)
+        h = a * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((Bt, D, N), jnp.float32)
+    xs = (jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(x, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

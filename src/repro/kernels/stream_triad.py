@@ -1,0 +1,45 @@
+"""STREAM triad Pallas kernel: a = b + alpha * c.
+
+The paper's Category-I reference workload. Bandwidth-bound: each grid step
+streams one (BLOCK_R, BLOCK_C) tile HBM→VMEM, does one FMA per element on
+the VPU, and streams the result back. Tiles are (8,128)-aligned for the
+v5e vector unit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 512
+
+
+def _triad_kernel(alpha_ref, b_ref, c_ref, a_ref):
+    alpha = alpha_ref[0].astype(b_ref.dtype)
+    a_ref[...] = b_ref[...] + alpha * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def triad_pallas(b: jax.Array, c: jax.Array, alpha,
+                 interpret: bool = False) -> jax.Array:
+    """b, c: (R, C); best with R % 8 == 0 and C % 128 == 0."""
+    R, C = b.shape
+    br, bc = min(BLOCK_R, R), min(BLOCK_C, C)
+    grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
+    alpha_arr = jnp.asarray([alpha], dtype=jnp.float32)
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), b.dtype),
+        interpret=interpret,
+    )(alpha_arr, b, c)

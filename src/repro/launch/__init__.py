@@ -1,0 +1,6 @@
+"""Distributed launch layer: mesh construction, GSPMD sharding rules,
+train/serve steps, the multi-pod dry-run, and roofline analysis.
+
+NOTE: this package must stay import-light — dryrun.py sets XLA_FLAGS before
+its own jax import, and importing repro.launch must never initialise a jax
+backend."""

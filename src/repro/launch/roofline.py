@@ -1,0 +1,118 @@
+"""Roofline analysis over dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+`cost_analysis()` on the SPMD-partitioned module reports *per-device*
+flops/bytes, and the parsed collective bytes are per-device too, so the
+terms divide by per-chip rates directly.
+"""
+
+from __future__ import annotations
+
+import json
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (3D torus, ~per-chip usable)
+
+
+def roofline_terms(row: dict, chips: int) -> dict:
+    """Three roofline terms (seconds) for one dry-run row.
+
+    compute   — exact HLO FLOPs (scan-free differenced lowering);
+    memory    — fused-traffic analytic model (the HLO 'bytes accessed' is
+                an unfused upper bound on the CPU stand-in backend and is
+                reported separately as t_memory_hlo_upper);
+    collective— per-device collective bytes parsed from the SPMD HLO.
+    """
+    flops_dev = row.get("hlo_flops_per_device", 0.0)
+    bytes_hlo = row.get("hlo_bytes_per_device", 0.0)
+    coll_dev = row.get("collectives", {}).get(
+        "effective_bytes_per_device", 0.0)
+    try:
+        from repro.launch.analytic import (
+            analytic_bytes_per_device,
+            analytic_flops_global,
+        )
+        bytes_dev = analytic_bytes_per_device(row["arch"], row["shape"])
+        flops_check = analytic_flops_global(row["arch"], row["shape"])
+    except Exception:  # noqa: BLE001 — paper-workload rows have no arch
+        bytes_dev = bytes_hlo
+        flops_check = 0.0
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    # depth differencing can go nonmonotonic when XLA places collectives
+    # differently at depth 1 vs 2 — clamp and flag instead of reporting a
+    # negative term
+    nonlinear = coll_dev < 0
+    t_collective = max(coll_dev, 0.0) / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)),
+        key=lambda kv: kv[1])[0]
+    model = row.get("model_flops_global", 0.0)
+    hlo_global = flops_dev * chips
+    bound = max(t_compute, t_memory, t_collective)
+    ideal = (model / chips) / PEAK_FLOPS if chips else 0.0
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_hlo_upper_s": bytes_hlo / HBM_BW,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "collective_nonlinear_flag": nonlinear,
+        "model_flops_global": model,
+        "hlo_flops_global": hlo_global,
+        "analytic_flops_global": flops_check,
+        "useful_flops_ratio": model / hlo_global if hlo_global else 0.0,
+        # fraction of the compute roofline achievable if the dominant term
+        # were the only cost (upper-bounds MFU for this program)
+        "roofline_fraction": (ideal / bound) if bound else 0.0,
+        # resource-aware fraction: the fundamental lower bound is the max of
+        # ideal compute time and minimal memory time (weights+cache must
+        # stream once) — the right score for memory-bound decode cells
+        "fraction_resource": (max(ideal, t_memory) / bound) if bound else 0.0,
+    }
+
+
+def load_rows(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def analyze(path: str, mesh: str = "16x16") -> list[dict]:
+    chips = 512 if mesh == "2x16x16" else 256
+    out = []
+    for row in load_rows(path):
+        if row.get("mesh") != mesh:
+            continue
+        entry = {k: row.get(k) for k in ("arch", "shape", "mesh", "status")}
+        if row.get("status") == "ok":
+            entry.update(roofline_terms(row, chips))
+        elif row.get("status") == "skipped":
+            entry["reason"] = row.get("reason")
+        else:
+            entry["error"] = row.get("error")
+        out.append(entry)
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    for e in analyze(args.path, args.mesh):
+        print(json.dumps(e))
+
+
+if __name__ == "__main__":
+    main()

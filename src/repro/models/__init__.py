@@ -1,0 +1,26 @@
+"""Composable model definitions: unified config + functional layer library."""
+
+from repro.models.config import (
+    ATTN,
+    ATTN_LOCAL,
+    CROSS,
+    MAMBA,
+    MLP,
+    MOE,
+    NONE,
+    ModelConfig,
+)
+from repro.models.transformer import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "ATTN", "ATTN_LOCAL", "CROSS", "MAMBA", "MLP", "MOE",
+    "NONE", "init_params", "forward", "prefill", "decode_step", "init_cache",
+    "encode",
+]

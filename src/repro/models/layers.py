@@ -1,0 +1,96 @@
+"""Shared neural layers: norms, gated MLP, rotary embeddings, embedding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, shape, scale: float = 0.02) -> Array:
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale
+            ).astype(jnp.bfloat16)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def activation(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ----------------------------------------------------------------- gated MLP
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi_up": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model)),
+    }
+    if gated:
+        p["wi_gate"] = dense_init(k1, (d_model, d_ff))
+    return p
+
+
+def mlp_apply(p: dict, x: Array, act: str = "silu") -> Array:
+    if "wi_gate" in p:
+        h = activation(x @ p["wi_gate"], act) * (x @ p["wi_up"])
+    else:
+        h = activation(x @ p["wi_up"], act)
+    return h @ p["wo"]
+
+
+# -------------------------------------------------------------------- rotary
+
+def rope_frequencies(head_dim: int, theta: float, rotary_dim: int) -> Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    half = rotary_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               partial: float = 1.0) -> Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S) absolute indices.
+    `partial` < 1 rotates only the leading fraction of D (ChatGLM-style
+    2D/partial rotary).
+    """
+    d = x.shape[-1]
+    rot = int(d * partial)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(d, theta, rot)                     # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv      # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, r/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate(
+        [y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1)
+
+
+# ----------------------------------------------------------------- embedding
+
+def embed_init(key, vocab: int, d_model: int) -> Array:
+    return dense_init(key, (vocab, d_model))
+
+
+def embed_apply(table: Array, ids: Array, scale: bool, d_model: int) -> Array:
+    x = jnp.take(table, ids, axis=0)
+    if scale:
+        x = x * jnp.asarray(d_model ** 0.5, dtype=x.dtype)
+    return x

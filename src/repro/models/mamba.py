@@ -1,0 +1,168 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba hybrid layers).
+
+Training/prefill uses a chunked associative scan: the sequence is split into
+chunks of CHUNK tokens; within a chunk the linear recurrence
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(dt_t * A),  b_t = (dt_t x_t) B_t
+is solved with `jax.lax.associative_scan` (elementwise over (d_inner, N) —
+materialises only (B, CHUNK, d_inner, N) transients, which shard over the
+`model` axis via d_inner), and the carry h crosses chunks through a
+`jax.lax.scan`. Decode is a single recurrence step with a conv ring buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+CHUNK = 128
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, conv = cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (conv, di), scale=0.1),
+        "conv_b": jnp.zeros((di,), dtype=jnp.bfloat16),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ns)),
+        "dt_proj": dense_init(ks[3], (dtr, di), scale=dtr ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, dtype=jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, ns + 1, dtype=jnp.float32)), (di, ns)
+        ).copy(),
+        "D": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time. x: (B,S,di), w: (K,di)."""
+    K = w.shape[0]
+    y = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[K - 1 - i]
+    return y + b
+
+
+def _ssm_inputs(p: dict, cfg: ModelConfig, xc: Array):
+    """Project conv output to (dt, B, C) selective parameters."""
+    ns, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = xc @ p["x_proj"]                                   # (B,S,dtr+2N)
+    dt_r = proj[..., :dtr]
+    B_ssm = proj[..., dtr: dtr + ns].astype(jnp.float32)      # (B,S,N)
+    C_ssm = proj[..., dtr + ns:].astype(jnp.float32)          # (B,S,N)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])  # (B,S,di)
+    return dt, B_ssm, C_ssm
+
+
+def _scan_chunk(a: Array, b: Array, h0: Array):
+    """Associative scan of h_t = a_t h_{t-1} + b_t within one chunk.
+    a,b: (B,L,di,N) fp32; h0: (B,di,N). Returns (h_all (B,L,di,N), h_last)."""
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    a_star, b_star = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_star * h0[:, None] + b_star
+    return h_all, h_all[:, -1]
+
+
+def mamba_forward(p: dict, cfg: ModelConfig, x: Array,
+                  return_state: bool = False):
+    """Full-sequence (train / prefill) pass. x: (B,S,d) -> (B,S,d).
+    With return_state=True also returns the decode cache (final SSM state +
+    conv ring buffer) so prefill can hand off to decode."""
+    B, S, d = x.shape
+    di, ns = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                       # (B,S,di)
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, B_ssm, C_ssm = _ssm_inputs(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])                                  # (di,N)
+    u = (dt * xc.astype(jnp.float32))                         # (B,S,di)
+
+    L = min(CHUNK, S)
+    pad = (-S) % L
+    nc = (S + pad) // L
+
+    def chunked(t):
+        t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, u_c = chunked(dt), chunked(u)                       # (nc,B,L,di)
+    Bc, Cc = chunked(B_ssm), chunked(C_ssm)                   # (nc,B,L,N)
+    # padded tail steps must not pollute the carried state: a=1, b=0
+    if pad:
+        valid = chunked(jnp.ones((B, S), jnp.float32))        # (nc,B,L)
+    else:
+        valid = None
+
+    def step(h, inp):
+        dt_i, u_i, B_i, C_i, v_i = inp
+        a = jnp.exp(dt_i[..., None] * A)                      # (B,L,di,N)
+        b = u_i[..., None] * B_i[:, :, None, :]               # (B,L,di,N)
+        if v_i is not None:
+            m = v_i[..., None, None]
+            a = a * m + (1.0 - m)
+            b = b * m
+        h_all, h_last = _scan_chunk(a, b, h)
+        y = jnp.einsum("blnd,bln->bld", h_all.swapaxes(-1, -2), C_i)
+        return h_last, y
+
+    h0 = jnp.zeros((B, di, ns), dtype=jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, (dt_c, u_c, Bc, Cc, valid))
+    y = ys.swapaxes(0, 1).reshape(B, nc * L, di)[:, :S]
+    y = y.astype(x.dtype) + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    conv_tail = x_in[:, S - (K - 1):].astype(jnp.bfloat16) if S >= K - 1 \
+        else jnp.pad(x_in, ((0, 0), (K - 1 - S, 0), (0, 0))
+                     ).astype(jnp.bfloat16)
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def mamba_init_cache(cfg: ModelConfig, B: int, dtype=jnp.float32) -> dict:
+    di, ns, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((B, di, ns), dtype=jnp.float32),
+        "conv": jnp.zeros((B, K - 1, di), dtype=jnp.bfloat16),
+    }
+
+
+def mamba_decode_step(p: dict, cfg: ModelConfig, x: Array,
+                      cache: dict) -> tuple[Array, dict]:
+    """Single-token step. x: (B,1,d)."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                       # (B,di)
+    K = cfg.ssm_conv
+    win = jnp.concatenate([cache["conv"],
+                           x_in[:, None].astype(jnp.bfloat16)], axis=1)
+    xc = jax.nn.silu(
+        jnp.sum(win * p["conv_w"][None], axis=1) + p["conv_b"])
+    dt, B_ssm, C_ssm = _ssm_inputs(p, cfg, xc[:, None])
+    dt, B_ssm, C_ssm = dt[:, 0], B_ssm[:, 0], C_ssm[:, 0]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                            # (B,di,N)
+    b = (dt * xc.astype(jnp.float32))[..., None] * B_ssm[:, None, :]
+    h = a * cache["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm).astype(x.dtype)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": win[:, 1:]}

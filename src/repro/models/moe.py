@@ -1,0 +1,135 @@
+"""Top-k Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+Dispatch uses flat scatter-add / gather (not (T,E,C) one-hot masks) so the
+memory footprint is O(E*C*d) and HLO FLOPs reflect *active* expert compute —
+which keeps the roofline's MODEL_FLOPS/HLO_FLOPS ratio honest for MoE archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import activation, dense_init
+
+Array = jax.Array
+
+# Optional GSPMD hint for the (E*C, d) dispatch buffer; set by the launch
+# layer before lowering so the buffer never materialises replicated on a
+# production mesh (tests/examples on one device leave it None).
+BUFFER_SPEC = None
+
+# Shard-local expert-parallel dispatch (beyond-paper §Perf optimization):
+# when set to (mesh, dp_axes, model_axis), the dispatch/expert/combine runs
+# inside shard_map with per-shard capacity — GSPMD never sees the global
+# scatter (which it can only partition by full rematerialisation, observed
+# as 100s-scale collective terms and replicated expert compute).
+SHARD_MAP_SPEC = None
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k0, (d, e)),
+        "wi_gate": dense_init(k1, (e, d, f)),
+        "wi_up": dense_init(k2, (e, d, f)),
+        "wo": dense_init(k3, (e, f, d)),
+    }
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    """x: (B,S,d) -> (y, aux_loss). Tokens over capacity are dropped
+    (standard capacity-factor routing); aux = load-balancing loss.
+
+    Dispatches to the shard-local EP path when SHARD_MAP_SPEC is set."""
+    if SHARD_MAP_SPEC is not None:
+        return _moe_apply_shardmap(p, cfg, x)
+    return _moe_core(p, cfg, x)
+
+
+def _moe_core(p: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    cap = max(8, int(cfg.capacity_factor * T * k / e))
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                        # (T, k)
+    gate = (gate / jnp.sum(gate, axis=-1, keepdims=True)).astype(x.dtype)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (T, k, E)
+    flatoh = onehot.reshape(T * k, e)
+    pos_in_expert = (jnp.cumsum(flatoh, axis=0) - flatoh)      # (T*k, E)
+    pos = jnp.sum(pos_in_expert * flatoh, axis=-1)             # (T*k,)
+    keep = pos < cap
+    slot = idx.reshape(T * k) * cap + jnp.minimum(pos, cap - 1)
+    slot = jnp.where(keep, slot, e * cap)                      # overflow sink
+
+    # dispatch: scatter tokens into (E*C + 1, d)
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+    xk = jnp.repeat(xt, k, axis=0)                             # (T*k, d)
+    buf = buf.at[slot].add(xk)
+    buf = buf[: e * cap].reshape(e, cap, d)
+    if BUFFER_SPEC is not None and SHARD_MAP_SPEC is None:
+        cap_ax, d_ax, dp_total, model_total = BUFFER_SPEC
+        spec = jax.sharding.PartitionSpec(
+            None,
+            cap_ax if cap % dp_total == 0 else None,
+            d_ax if d % model_total == 0 else None)
+        buf = jax.lax.with_sharding_constraint(buf, spec)
+
+    # expert compute (active FLOPs only: E * C * d * f)
+    h = activation(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]), cfg.act)
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # (E, C, d)
+
+    # combine: gather back and weight by gates
+    flat = jnp.concatenate(
+        [out.reshape(e * cap, d), jnp.zeros((1, d), dtype=out.dtype)], axis=0)
+    yk = flat[slot].reshape(T, k, d)
+    y = jnp.sum(yk * gate[..., None], axis=1).reshape(B, S, d)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y, aux
+
+
+def _moe_apply_shardmap(p: dict, cfg: ModelConfig, x: Array
+                        ) -> tuple[Array, Array]:
+    """Expert-parallel-style shard-local dispatch.
+
+    Tokens stay on their data shard; capacity is per-shard; the only
+    communication is one psum of the (T_loc, d) combined output over the
+    tensor axis (the expert f-dim is TP-sharded) plus the aux-loss mean.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    mesh, dp_axes, model_ax = SHARD_MAP_SPEC
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def local_fn(pl, xl):
+        y, aux = _moe_core(pl, cfg, xl)
+        y = jax.lax.psum(y, model_ax)
+        aux = jax.lax.pmean(aux, dp_axes + (model_ax,))
+        return y, aux
+
+    pspecs = {
+        "router": P(None, None),
+        "wi_gate": P(None, None, model_ax),
+        "wi_up": P(None, None, model_ax),
+        "wo": P(None, model_ax, None),
+    }
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(pspecs, P(dp, None, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(p, x)

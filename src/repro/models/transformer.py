@@ -1,0 +1,454 @@
+"""Model assembly: layer stacks (scan-over-periods), decoder-only LMs,
+hybrid SSM/attention stacks, VLM cross-attention, and encoder-decoder.
+
+Layers are grouped into *periods* (one repetition of `cfg.layer_pattern`);
+periods are executed with `jax.lax.scan` over stacked parameters so HLO size
+and compile time are independent of depth. Layers that do not fill a whole
+period are unrolled at the end ("remainder"). KV/SSM caches follow the same
+layout (leading n_periods axis), so prefill and decode also scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models.config import ATTN, ATTN_LOCAL, CROSS, MAMBA, MLP, MOE, NONE, ModelConfig
+from repro.models.layers import (
+    dense_init,
+    embed_apply,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+
+Array = jax.Array
+PyTree = Any
+
+# Optional GSPMD hints, set by the launch layer before lowering:
+#   LOGITS_SPEC — PartitionSpec for (B,S,V) logits (vocab over 'model')
+#   ACT_SPEC    — PartitionSpec for (B,S,D) residual activations; anchors
+#                 batch sharding through the embedding gather and the
+#                 period-scan boundaries (GSPMD propagation can drop it at
+#                 gathers — observed as 17 GB replicated score tensors).
+LOGITS_SPEC = None
+ACT_SPEC = None
+
+# Roofline instrumentation: XLA cost_analysis counts while-loop bodies once,
+# so the dry-run's roofline tier unrolls the period stack (at reduced depth)
+# to make HLO FLOP counts exact. Never enabled for real training.
+UNROLL_PERIODS = False
+
+
+def _period_slice(pparams: PyTree, i: int) -> PyTree:
+    return jax.tree.map(lambda x: x[i], pparams)
+
+
+def _anchor(x: Array) -> Array:
+    if ACT_SPEC is not None and x.ndim == len(ACT_SPEC):
+        return jax.lax.with_sharding_constraint(x, ACT_SPEC)
+    return x
+
+
+# ------------------------------------------------------------------- init
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), jnp.bfloat16)}
+    if mixer in (ATTN, ATTN_LOCAL):
+        p["mixer"] = attn_lib.attn_init(k1, cfg)
+    elif mixer == CROSS:
+        p["mixer"] = attn_lib.attn_init(k1, cfg)
+        p["gate"] = jnp.zeros((), jnp.bfloat16)   # gated cross (llama-vision)
+    elif mixer == MAMBA:
+        p["mixer"] = mamba_lib.mamba_init(k1, cfg)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if ffn == MLP:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated)
+    elif ffn == MOE:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+        p["ffn"] = moe_lib.moe_init(k2, cfg)
+    elif ffn != NONE:
+        raise ValueError(f"unknown ffn {ffn!r}")
+    return p
+
+
+def _init_period(key, cfg: ModelConfig) -> dict:
+    pat, fpat = cfg.layer_pattern, cfg.ffn_pattern
+    keys = jax.random.split(key, len(pat))
+    return {
+        f"l{j}": _init_layer(keys[j], cfg, pat[j], fpat[j % len(fpat)])
+        for j in range(len(pat))
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    if len(cfg.layer_pattern) % len(cfg.ffn_pattern) != 0 \
+            and len(cfg.ffn_pattern) % len(cfg.layer_pattern) != 0:
+        raise ValueError("ffn_pattern must align with layer_pattern periods")
+    k_embed, k_per, k_rem, k_head, k_enc = jax.random.split(key, 5)
+    params: dict = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head,
+                                       (cfg.d_model, cfg.padded_vocab))
+    if cfg.n_periods > 0:
+        pkeys = jax.random.split(k_per, cfg.n_periods)
+        params["periods"] = jax.vmap(
+            lambda k: _init_period(k, cfg))(pkeys)
+    if cfg.n_remainder > 0:
+        rkeys = jax.random.split(k_rem, cfg.n_remainder)
+        base = cfg.n_periods * len(cfg.layer_pattern)
+        params["remainder"] = {
+            f"r{i}": _init_layer(
+                rkeys[i], cfg,
+                cfg.layer_pattern[(base + i) % len(cfg.layer_pattern)],
+                cfg.ffn_pattern[(base + i) % len(cfg.ffn_pattern)])
+            for i in range(cfg.n_remainder)
+        }
+    if cfg.is_encdec:
+        ekeys = jax.random.split(k_enc, cfg.encoder_layers + 1)
+        params["encoder"] = {
+            f"e{i}": {
+                "norm1": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+                "mixer": attn_lib.attn_init(ekeys[i], cfg),
+                "norm2": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+                "ffn": mlp_init(jax.random.fold_in(ekeys[i], 1),
+                                cfg.d_model, cfg.d_ff, cfg.mlp_gated),
+            }
+            for i in range(cfg.encoder_layers)
+        }
+        params["encoder"]["final_norm"] = jnp.zeros((cfg.d_model,),
+                                                    jnp.bfloat16)
+    return params
+
+
+# ------------------------------------------------------------------ layers
+
+def _theta_for(cfg: ModelConfig, mixer: str) -> float:
+    if mixer == ATTN and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _apply_layer(
+    lp: dict,
+    cfg: ModelConfig,
+    x: Array,
+    mixer: str,
+    ffn: str,
+    *,
+    positions: Array,
+    ctx: Optional[Array],
+    cache: Optional[dict],
+    decode: bool,
+) -> tuple[Array, Optional[dict], Array]:
+    """One residual layer. Returns (x, cache_out, moe_aux)."""
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    cache_out: Optional[dict] = None
+    if mixer in (ATTN, ATTN_LOCAL):
+        window = cfg.sliding_window if mixer == ATTN_LOCAL else 0
+        o, kv = attn_lib.self_attention(
+            lp["mixer"], cfg, h, positions=positions, window=window,
+            theta=_theta_for(cfg, mixer),
+            cache=cache if decode else None)
+        cache_out = kv
+    elif mixer == CROSS:
+        o = attn_lib.cross_attention(lp["mixer"], cfg, h, ctx)
+        o = o * jnp.tanh(lp["gate"].astype(jnp.float32)).astype(o.dtype) \
+            if "gate" in lp else o
+        cache_out = {}
+    elif mixer == MAMBA:
+        if decode:
+            o, cache_out = mamba_lib.mamba_decode_step(lp["mixer"], cfg, h,
+                                                       cache)
+        else:
+            o = mamba_lib.mamba_forward(lp["mixer"], cfg, h)
+            cache_out = None  # prefill state handled separately
+    else:
+        raise ValueError(mixer)
+    x = x + o
+    aux = jnp.zeros((), jnp.float32)
+    if ffn in (MLP, MOE):
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if ffn == MLP:
+            f = mlp_apply(lp["ffn"], h2, cfg.act)
+        else:
+            f, aux = moe_lib.moe_apply(lp["ffn"], cfg, h2)
+        x = x + f
+    return x, cache_out, aux
+
+
+def _kind(cfg: ModelConfig, j: int) -> tuple[str, str]:
+    return (cfg.layer_pattern[j % len(cfg.layer_pattern)],
+            cfg.ffn_pattern[j % len(cfg.ffn_pattern)])
+
+
+# --------------------------------------------------------------- forward
+
+def forward(params: PyTree, cfg: ModelConfig, tokens: Array,
+            ctx: Optional[Array] = None,
+            return_hidden: bool = False) -> tuple[Array, Array]:
+    """Teacher-forced full-sequence pass. Returns (logits, moe_aux_mean);
+    with return_hidden=True returns the final normed hidden states instead
+    of logits (the train loss folds the LM head into a chunked CE)."""
+    B, S = tokens.shape
+    x = embed_apply(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    x = _anchor(x)
+    # batch-free positions: masks stay (1,1,1,S,T), not per-batch-element
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def period_body(carry, pparams):
+        xc, aux = carry
+        for j, mixer in enumerate(cfg.layer_pattern):
+            _, fkind = _kind(cfg, j)
+            xc, _, a = _apply_layer(
+                pparams[f"l{j}"], cfg, xc, mixer, fkind,
+                positions=positions, ctx=ctx, cache=None, decode=False)
+            aux = aux + a
+        return (_anchor(xc), aux), None
+
+    if cfg.remat == "full":
+        period_body = jax.checkpoint(period_body, prevent_cse=False)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_periods > 0:
+        if UNROLL_PERIODS:
+            for i in range(cfg.n_periods):
+                (x, aux), _ = period_body(
+                    (x, aux), _period_slice(params["periods"], i))
+        else:
+            (x, aux), _ = jax.lax.scan(period_body, (x, aux),
+                                       params["periods"])
+    base = cfg.n_periods * len(cfg.layer_pattern)
+    for i in range(cfg.n_remainder):
+        mixer, fkind = _kind(cfg, base + i)
+        x, _, a = _apply_layer(
+            params["remainder"][f"r{i}"], cfg, x, mixer, fkind,
+            positions=positions, ctx=ctx, cache=None, decode=False)
+        aux = aux + a
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    n_moe = max(1, sum(1 for _, f in cfg.layer_kinds() if f == MOE))
+    if return_hidden:
+        return x, aux / n_moe
+    logits = _lm_head(params, cfg, x)
+    return logits, aux / n_moe
+
+
+def _lm_head(params: PyTree, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    if LOGITS_SPEC is not None:
+        logits = jax.lax.with_sharding_constraint(logits, LOGITS_SPEC)
+    if cfg.padded_vocab != cfg.vocab:  # mask the padded vocab tail
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-2.0e38, logits.dtype),
+                           logits)
+    return logits
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: Array) -> Array:
+    """Encoder stack over precomputed modality-frontend frames (enc-dec)."""
+    x = frames
+    enc = params["encoder"]
+    for i in range(cfg.encoder_layers):
+        lp = enc[f"e{i}"]
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        x = x + attn_lib.encoder_self_attention(lp["mixer"], cfg, h)
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["ffn"], h2, cfg.act)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------- caches
+
+def _layer_cache(cfg: ModelConfig, mixer: str, B: int, S: int) -> dict:
+    hd = cfg.resolved_head_dim
+    if mixer in (ATTN, ATTN_LOCAL):
+        W = S if (mixer == ATTN or not cfg.sliding_window) \
+            else min(cfg.sliding_window, S)
+        return {
+            "k": jnp.zeros((B, cfg.n_kv_heads, W, hd), jnp.bfloat16),
+            "v": jnp.zeros((B, cfg.n_kv_heads, W, hd), jnp.bfloat16),
+            "pos": jnp.full((B, W), -1, jnp.int32),
+        }
+    if mixer == MAMBA:
+        return mamba_lib.mamba_init_cache(cfg, B)
+    if mixer == CROSS:
+        return {}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int) -> PyTree:
+    """Decode cache sized for a context of S tokens."""
+    cache: dict = {"t": jnp.zeros((B,), jnp.int32)}
+    if cfg.n_periods > 0:
+        def one_period(_):
+            return {f"l{j}": _layer_cache(cfg, cfg.layer_pattern[j], B, S)
+                    for j in range(len(cfg.layer_pattern))}
+        cache["periods"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf, (cfg.n_periods,) + leaf.shape).copy(),
+            one_period(None))
+    base = cfg.n_periods * len(cfg.layer_pattern)
+    if cfg.n_remainder > 0:
+        cache["remainder"] = {
+            f"r{i}": _layer_cache(
+                cfg, cfg.layer_pattern[(base + i) % len(cfg.layer_pattern)],
+                B, S)
+            for i in range(cfg.n_remainder)
+        }
+    return cache
+
+
+# ---------------------------------------------------------------- prefill
+
+def _kv_to_buffer(kv: dict, W: int) -> dict:
+    """Convert full-sequence K/V (B,S,KV,hd) into the rolling decode buffer
+    layout (B,KV,W,hd) + per-slot absolute positions."""
+    k, v, pos = kv["k"], kv["v"], kv["pos"]
+    B, S, KV, hd = k.shape
+    take = min(W, S)
+    ks = jnp.swapaxes(k[:, S - take:], 1, 2)                  # (B,KV,take,hd)
+    vs = jnp.swapaxes(v[:, S - take:], 1, 2)
+    ptail = pos[:, S - take:]                                 # (B,take)
+    slots = (jnp.arange(S - take, S, dtype=jnp.int32) % W)    # (take,)
+    bk = jnp.zeros((B, KV, W, hd), ks.dtype).at[:, :, slots].set(ks)
+    bv = jnp.zeros((B, KV, W, hd), vs.dtype).at[:, :, slots].set(vs)
+    bpos = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(ptail)
+    return {"k": bk, "v": bv, "pos": bpos}
+
+
+def prefill(params: PyTree, cfg: ModelConfig, tokens: Array,
+            ctx: Optional[Array] = None, cache_len: int | None = None
+            ) -> tuple[Array, PyTree]:
+    """Process a prompt, returning (logits, decode cache)."""
+    B, S = tokens.shape
+    CL = cache_len or S
+    x = embed_apply(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    x = _anchor(x)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def run_layer(lp, xc, mixer, fkind):
+        h = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        if mixer in (ATTN, ATTN_LOCAL):
+            window = cfg.sliding_window if mixer == ATTN_LOCAL else 0
+            o, kv = attn_lib.self_attention(
+                lp["mixer"], cfg, h, positions=positions, window=window,
+                theta=_theta_for(cfg, mixer))
+            W = CL if (mixer == ATTN or not cfg.sliding_window) \
+                else min(cfg.sliding_window, CL)
+            c_out = _kv_to_buffer(kv, W)
+        elif mixer == CROSS:
+            o = attn_lib.cross_attention(lp["mixer"], cfg, h, ctx)
+            o = o * jnp.tanh(lp["gate"].astype(jnp.float32)).astype(o.dtype)
+            c_out = {}
+        elif mixer == MAMBA:
+            o, c_out = mamba_lib.mamba_forward(lp["mixer"], cfg, h,
+                                               return_state=True)
+        else:
+            raise ValueError(mixer)
+        xc = xc + o
+        if fkind in (MLP, MOE):
+            h2 = rms_norm(xc, lp["norm2"], cfg.norm_eps)
+            f = (mlp_apply(lp["ffn"], h2, cfg.act) if fkind == MLP
+                 else moe_lib.moe_apply(lp["ffn"], cfg, h2)[0])
+            xc = xc + f
+        return xc, c_out
+
+    cache: dict = {"t": jnp.full((B,), S, jnp.int32)}
+
+    def period_body(xc, pparams):
+        outs = {}
+        for j, mixer in enumerate(cfg.layer_pattern):
+            _, fkind = _kind(cfg, j)
+            xc, outs[f"l{j}"] = run_layer(pparams[f"l{j}"], xc, mixer, fkind)
+        return xc, outs
+
+    if cfg.n_periods > 0:
+        if UNROLL_PERIODS:
+            outs = []
+            for i in range(cfg.n_periods):
+                x, o = period_body(x, _period_slice(params["periods"], i))
+                outs.append(o)
+            cache["periods"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, cache["periods"] = jax.lax.scan(period_body, x,
+                                               params["periods"])
+    base = cfg.n_periods * len(cfg.layer_pattern)
+    if cfg.n_remainder > 0:
+        cache["remainder"] = {}
+        for i in range(cfg.n_remainder):
+            mixer, fkind = _kind(cfg, base + i)
+            x, c_out = run_layer(params["remainder"][f"r{i}"], x, mixer,
+                                 fkind)
+            cache["remainder"][f"r{i}"] = c_out
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits, cache
+
+
+# ----------------------------------------------------------------- decode
+
+def decode_step(params: PyTree, cfg: ModelConfig, token: Array,
+                cache: PyTree, ctx: Optional[Array] = None
+                ) -> tuple[Array, PyTree]:
+    """One greedy decode step. token: (B, 1) int32."""
+    B = token.shape[0]
+    x = embed_apply(params["embed"], token, cfg.embed_scale, cfg.d_model)
+    positions = cache["t"][:, None]                            # (B,1)
+    new_cache: dict = {"t": cache["t"] + 1}
+
+    def period_body(xc, scanned):
+        pparams, pcache = scanned
+        outs = {}
+        for j, mixer in enumerate(cfg.layer_pattern):
+            _, fkind = _kind(cfg, j)
+            xc, c_out, _ = _apply_layer(
+                pparams[f"l{j}"], cfg, xc, mixer, fkind,
+                positions=positions, ctx=ctx,
+                cache=pcache[f"l{j}"], decode=True)
+            outs[f"l{j}"] = c_out if c_out is not None else pcache[f"l{j}"]
+        return xc, outs
+
+    if cfg.n_periods > 0:
+        if UNROLL_PERIODS:
+            outs = []
+            for i in range(cfg.n_periods):
+                x, o = period_body(
+                    x, (_period_slice(params["periods"], i),
+                        _period_slice(cache["periods"], i)))
+                outs.append(o)
+            new_cache["periods"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_cache["periods"] = jax.lax.scan(
+                period_body, x, (params["periods"], cache["periods"]))
+    base = cfg.n_periods * len(cfg.layer_pattern)
+    if cfg.n_remainder > 0:
+        new_cache["remainder"] = {}
+        for i in range(cfg.n_remainder):
+            mixer, fkind = _kind(cfg, base + i)
+            x, c_out, _ = _apply_layer(
+                params["remainder"][f"r{i}"], cfg, x, mixer, fkind,
+                positions=positions, ctx=ctx,
+                cache=cache["remainder"][f"r{i}"], decode=True)
+            new_cache["remainder"][f"r{i}"] = (
+                c_out if c_out is not None else cache["remainder"][f"r{i}"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits, new_cache

@@ -1,0 +1,16 @@
+from repro.optim.adamw import (
+    OptConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+__all__ = [
+    "OptConfig", "make_optimizer", "adamw_init", "adamw_update",
+    "adafactor_init", "adafactor_update", "clip_by_global_norm",
+    "cosine_schedule",
+]

@@ -1,0 +1,160 @@
+"""Optimizers: AdamW (fp32 moments, ZeRO-shardable) and a factored-second-
+moment variant ("adafactor-m": bf16 first moment + row/col-factored second
+moment) for trillion-scale parameter budgets where full fp32 moments exceed
+HBM (jamba-398B on a 256-chip pod).
+
+Functional API (no optax dependency): state pytrees mirror the param tree so
+the launch layer can attach ZeRO PartitionSpecs leaf-by-leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: OptConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    gsq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        grads, jnp.zeros((), jnp.float32))
+    norm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------- adamw
+
+def adamw_init(params: PyTree) -> PyTree:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptConfig, params: PyTree, grads: PyTree,
+                 state: PyTree) -> tuple[PyTree, PyTree]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/biases/scalars
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# --------------------------------------------------------------- adafactor
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor_init(params: PyTree) -> PyTree:
+    def vrow(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vcol(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "vr": jax.tree.map(vrow, params),
+        "vc": jax.tree.map(vcol, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptConfig, params: PyTree, grads: PyTree,
+                     state: PyTree) -> tuple[PyTree, PyTree]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b2 = cfg.b2
+
+    def upd(p, g, m, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if _factored(p):
+            vr_new = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc_new = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = (vr_new[..., None] * vc_new[..., None, :]
+                     / jnp.maximum(
+                         jnp.mean(vr_new, axis=-1)[..., None, None], 1e-30))
+            rms = jnp.sqrt(denom) + cfg.eps
+        else:
+            vr_new = b2 * vr + (1 - b2) * g2
+            vc_new = vc
+            rms = jnp.sqrt(vr_new) + cfg.eps
+        m_new = (cfg.b1 * m.astype(jnp.float32)
+                 + (1 - cfg.b1) * (g32 / rms)).astype(jnp.bfloat16)
+        delta = m_new.astype(jnp.float32)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new, vr_new, vc_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["vr"],
+                       state["vc"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"m": pick(1), "vr": pick(2), "vc": pick(3),
+                     "step": step}
+
+
+def make_optimizer(cfg: OptConfig) -> tuple[Callable, Callable]:
+    if cfg.kind == "adamw":
+        return adamw_init, adamw_update
+    if cfg.kind == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {cfg.kind!r}")

@@ -1,0 +1,10 @@
+"""Executable SVM runtime: range-granular host<->HBM streaming for
+oversubscribed serving (weight streaming) and training (activation
+offload), driven by the paper's range/fault/eviction model."""
+
+from repro.svm.planner import ParamRanges, plan_param_ranges
+from repro.svm.executor import StreamingExecutor
+from repro.svm.offload import OffloadPlan, plan_offload, simulate_offload
+
+__all__ = ["plan_param_ranges", "ParamRanges", "StreamingExecutor",
+           "OffloadPlan", "plan_offload", "simulate_offload"]

@@ -1,0 +1,62 @@
+"""Range planning over model parameters.
+
+Each parameter leaf is one managed allocation (the hipMallocManaged
+analogue); the paper's alignment rule splits it into SVM ranges. The plan
+maps leaves <-> range ids so the streaming executor can drive the
+SVMManager's fault/migration/eviction machinery with real tensors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import AddressSpace, SVMManager
+from repro.core.costmodel import CostParams, TPU_V5E_HOST
+
+PyTree = Any
+
+
+def _path_str(kp) -> str:
+    return "/".join(
+        getattr(k, "key", getattr(k, "name", str(k))) for k in kp)
+
+
+@dataclasses.dataclass
+class ParamRanges:
+    space: AddressSpace
+    leaf_ranges: dict[str, list[int]]      # leaf path -> range ids
+    leaf_bytes: dict[str, int]
+    hbm_budget: int
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.leaf_bytes.values())
+
+    def dos(self) -> float:
+        return self.total_bytes / self.hbm_budget * 100.0
+
+    def manager(self, *, policy: str = "lrf",
+                params: CostParams = TPU_V5E_HOST,
+                **kw) -> SVMManager:
+        return SVMManager(self.space, policy=policy, params=params, **kw)
+
+
+def plan_param_ranges(params: PyTree, hbm_budget: int,
+                      base: int = 175 * 1024 * 1024) -> ParamRanges:
+    """Build the unified address space + range table for a param tree."""
+    space = AddressSpace(hbm_budget, base=base)
+    leaf_ranges: dict[str, list[int]] = {}
+    leaf_bytes: dict[str, int] = {}
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(params):
+        path = _path_str(kp)
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize \
+            if leaf.shape else leaf.dtype.itemsize
+        alloc = space.alloc(max(nbytes, 1), name=path)
+        leaf_ranges[path] = [r.rid for r in space.ranges_of(alloc)]
+        leaf_bytes[path] = nbytes
+    return ParamRanges(space=space, leaf_ranges=leaf_ranges,
+                       leaf_bytes=leaf_bytes, hbm_budget=hbm_budget)

@@ -1,0 +1,88 @@
+"""Blockwise (flash-semantics) attention vs direct softmax attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+
+def _mk(B, S, T, KV, G, D, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D), jnp.float32) * D ** -0.5
+    k = jax.random.normal(ks[1], (B, T, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, D), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 7])
+@pytest.mark.parametrize("S,T", [(32, 32), (24, 40), (33, 100)])
+def test_blockwise_matches_direct_causal(S, T, window):
+    B, KV, G, D = 2, 2, 2, 8
+    q, k, v = _mk(B, S, T, KV, G, D)
+    qpos = jnp.broadcast_to(jnp.arange(T - S, T), (B, S))  # suffix queries
+    kpos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    direct = A._attend(q, k, v, qpos, kpos, window)
+    old = A.BLOCK_T
+    try:
+        A.BLOCK_T = 16
+        block = A._blockwise_attention(q, k, v, qpos, kpos, window)
+    finally:
+        A.BLOCK_T = old
+    np.testing.assert_allclose(np.asarray(block), np.asarray(direct),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_matches_direct_noncausal():
+    B, S, T, KV, G, D = 2, 16, 50, 2, 2, 8
+    q, k, v = _mk(B, S, T, KV, G, D)
+    direct = A._attend(q, k, v, None, None, 0)
+    old_thresh, old_bt = A.FLASH_THRESHOLD, A.BLOCK_T
+    try:
+        A.FLASH_THRESHOLD, A.BLOCK_T = 1, 16   # force blockwise path
+        block = A._attend(q, k, v, None, None, 0)
+    finally:
+        A.FLASH_THRESHOLD, A.BLOCK_T = old_thresh, old_bt
+    np.testing.assert_allclose(np.asarray(block), np.asarray(direct),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=40),
+    t_extra=st.integers(min_value=0, max_value=40),
+    window=st.sampled_from([0, 3, 16]),
+    bt=st.sampled_from([8, 16, 32]),
+)
+def test_property_blockwise_equivalence(s, t_extra, window, bt):
+    t = s + t_extra
+    q, k, v = _mk(1, s, t, 1, 2, 4, key=s * 100 + t)
+    qpos = jnp.broadcast_to(jnp.arange(t - s, t), (1, s))
+    kpos = jnp.broadcast_to(jnp.arange(t), (1, t))
+    direct = A._attend(q, k, v, qpos, kpos, window)
+    old = A.BLOCK_T
+    try:
+        A.BLOCK_T = bt
+        block = A._blockwise_attention(q, k, v, qpos, kpos, window)
+    finally:
+        A.BLOCK_T = old
+    np.testing.assert_allclose(np.asarray(block), np.asarray(direct),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_grads_finite():
+    B, S, T, KV, G, D = 1, 16, 32, 1, 2, 4
+    q, k, v = _mk(B, S, T, KV, G, D)
+    qpos = jnp.broadcast_to(jnp.arange(T - S, T), (B, S))
+    kpos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    old = A.BLOCK_T
+    try:
+        A.BLOCK_T = 8
+        g = jax.grad(lambda q_: jnp.sum(
+            A._blockwise_attention(q_, k, v, qpos, kpos, 0)
+            .astype(jnp.float32)))(q)
+    finally:
+        A.BLOCK_T = old
+    assert bool(jnp.isfinite(g).all())

@@ -1,0 +1,107 @@
+"""Range construction (paper §2.1, Fig. 2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GB,
+    MB,
+    AddressSpace,
+    pow2_floor,
+    svm_alignment,
+)
+
+
+def test_pow2_floor():
+    assert pow2_floor(1) == 1
+    assert pow2_floor(2) == 2
+    assert pow2_floor(3) == 2
+    assert pow2_floor(1024) == 1024
+    assert pow2_floor(1025) == 1024
+    with pytest.raises(ValueError):
+        pow2_floor(0)
+
+
+def test_alignment_rule():
+    # paper: 48 GB available => floor(48/32) GB = 1.5 GB -> pow2 floor = 1 GB
+    assert svm_alignment(48 * GB) == 1 * GB
+    assert svm_alignment(64 * GB) == 2 * GB
+    assert svm_alignment(63 * GB) == 1 * GB
+    # minimum 2 MB
+    assert svm_alignment(1 * MB) == 2 * MB
+    assert svm_alignment(32 * MB) == 2 * MB
+    assert svm_alignment(128 * MB) == 4 * MB
+
+
+def test_figure2_range_construction():
+    """Paper Fig. 2: three 1.5 GB allocations on a 1 GB-aligned GPU produce
+    7 ranges, smallest 175 MB, largest 1 GB (base offset 175 MB)."""
+    space = AddressSpace(48 * GB, base=175 * MB)
+    assert space.alignment == 1 * GB
+    for i in range(3):
+        space.alloc(int(1.5 * GB), f"m{i}")
+    assert len(space.ranges) == 7
+    sizes = sorted(r.size for r in space.ranges)
+    assert sizes[0] == 175 * MB
+    assert sizes[-1] == 1 * GB
+    # ranges per allocation: 2 + 3 + 2
+    per_alloc = [len(space.ranges_of(a)) for a in space.allocations]
+    assert per_alloc == [2, 3, 2]
+
+
+def test_ranges_tile_allocations_exactly():
+    space = AddressSpace(48 * GB, base=175 * MB)
+    a = space.alloc(int(2.5 * GB))
+    rs = space.ranges_of(a)
+    assert rs[0].start == a.start
+    assert rs[-1].end == a.end
+    for r1, r2 in zip(rs, rs[1:]):
+        assert r1.end == r2.start
+
+
+def test_range_at_lookup():
+    space = AddressSpace(48 * GB, base=175 * MB)
+    a = space.alloc(3 * GB)
+    r = space.range_at(a.start)
+    assert r.contains(a.start)
+    r2 = space.range_at(a.end - 1)
+    assert r2.contains(a.end - 1)
+    with pytest.raises(KeyError):
+        space.range_at(a.end + 10 * GB)
+
+
+def test_ranges_overlapping():
+    space = AddressSpace(48 * GB, base=175 * MB)
+    a = space.alloc(3 * GB)
+    rs = list(space.ranges_overlapping(a.start, a.end))
+    assert rs == space.ranges_of(a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    base=st.integers(min_value=0, max_value=2 * GB),
+    sizes=st.lists(st.integers(min_value=4096, max_value=4 * GB),
+                   min_size=1, max_size=6),
+    cap_gb=st.integers(min_value=1, max_value=96),
+)
+def test_property_range_invariants(base, sizes, cap_gb):
+    """Invariants for any allocation sequence:
+    - ranges tile each allocation exactly (no gaps/overlap),
+    - every range size <= alignment,
+    - interior edges are alignment-aligned."""
+    space = AddressSpace(cap_gb * GB, base=base)
+    for s in sizes:
+        space.alloc(s)
+    for a in space.allocations:
+        rs = space.ranges_of(a)
+        assert rs[0].start == a.start and rs[-1].end == a.end
+        for r1, r2 in zip(rs, rs[1:]):
+            assert r1.end == r2.start
+            assert r2.start % space.alignment == 0  # interior cut aligned
+        for r in rs:
+            assert 0 < r.size <= space.alignment
+    # rids are dense and ordered by address
+    for i, r in enumerate(space.ranges):
+        assert r.rid == i
+    starts = [r.start for r in space.ranges]
+    assert starts == sorted(starts)

@@ -1,0 +1,164 @@
+"""Validation of the paper's workload taxonomy (Figs. 6–10, §3).
+
+These tests assert the *claims of the paper* against our simulator:
+category membership, asymptotes, thrashing onset, fault densities, and the
+SVM-aware algorithm wins. Calibration targets are documented in
+EXPERIMENTS.md §Validation.
+"""
+
+import pytest
+
+from repro.core import GB, dos_sweep, simulate
+from repro.core.traces import (
+    BFS,
+    Conv2d,
+    Gesummv,
+    Jacobi2d,
+    Mvt,
+    Sgemm,
+    Stream,
+    Syr2k,
+    make_workload,
+)
+
+CAP = 8 * GB
+
+
+def _sweep(factory, dos):
+    rows = dos_sweep(factory, dos, CAP)
+    return {round(r["dos"]): r for r in rows}
+
+
+# ------------------------------------------------------------ categories
+
+def test_category1_stream_declines_moderately():
+    r = _sweep(lambda b: Stream(b), [78, 109, 156])
+    assert r[109]["norm_perf"] > 0.90
+    assert 0.55 < r[156]["norm_perf"] < 0.95
+    # no evictions below DOS 100
+    assert r[78]["evict_to_mig"] == 0.0
+
+
+def test_stream_asymptote_half_peak():
+    """Paper §3.2: STREAM's performance asymptotically approaches 1/2 as the
+    eviction-to-migration ratio approaches 1."""
+    r = _sweep(lambda b: Stream(b), [78, 900])
+    assert r[900]["norm_perf"] == pytest.approx(0.5, abs=0.06)
+    assert r[900]["evict_to_mig"] > 0.85
+
+
+def test_category2_jacobi_cliff_then_flat():
+    """Paper: 'performance decreases to about 40% at DOS=109' then
+    'minimally changes thereafter' (asymptote ≈0.36)."""
+    r = _sweep(lambda b: Jacobi2d(b), [78, 95, 109, 156, 300])
+    assert r[95]["norm_perf"] > 0.95           # no cliff below 100
+    assert r[109]["norm_perf"] == pytest.approx(0.40, abs=0.05)
+    assert r[156]["norm_perf"] == pytest.approx(r[109]["norm_perf"], abs=0.05)
+    assert r[300]["norm_perf"] == pytest.approx(0.37, abs=0.05)
+
+
+def test_category3_abrupt_mvt_gesummv():
+    for cls in (Mvt, Gesummv):
+        r = _sweep(lambda b, c=cls: c(b), [78, 95, 109])
+        assert r[95]["norm_perf"] > 0.9
+        assert r[109]["norm_perf"] < 0.05      # near zero right past 100
+        assert r[109]["evict_to_mig"] > 0.9
+
+
+def test_category3_gradual_sgemm_syr2k():
+    for cls in (Sgemm, Syr2k):
+        r = _sweep(lambda b, c=cls: c(b), [78, 109, 125, 156])
+        # gradual: strictly decreasing, not an instant collapse at 109
+        assert 0.3 < r[109]["norm_perf"] < 0.95
+        assert r[125]["norm_perf"] < r[109]["norm_perf"]
+        assert r[156]["norm_perf"] < 0.35
+
+
+def test_migration_count_explosion():
+    """Paper Fig. 10b: Category III migration counts increase by an order
+    of magnitude or more; Category I only linearly."""
+    for cls in (Mvt, Gesummv):
+        r = _sweep(lambda b, c=cls: c(b), [78, 109])
+        assert r[109]["migrations"] > 10 * r[78]["migrations"]
+    r = _sweep(lambda b: Sgemm(b), [78, 156])
+    assert r[156]["migrations"] > 10 * r[78]["migrations"]
+    r = _sweep(lambda b: Stream(b), [78, 156])
+    assert r[156]["migrations"] < 3 * r[78]["migrations"]   # linear-ish
+
+
+def test_sgemm_exponential_past_140():
+    r = _sweep(lambda b: Sgemm(b), [109, 125, 140, 156])
+    g1 = r[125]["migrations"] / r[109]["migrations"]
+    g2 = r[156]["migrations"] / r[140]["migrations"]
+    assert g2 > g1  # accelerating growth
+
+
+def test_evict_to_mig_ratio_shape():
+    """Fig. 10a: ratio 0 below DOS 100 (except BFS); jumps to ~1 for
+    Category III; grows slowly for Category I."""
+    for cls in (Stream, Conv2d, Jacobi2d, Sgemm, Syr2k, Mvt, Gesummv):
+        r = _sweep(lambda b, c=cls: c(b), [78])
+        assert r[78]["evict_to_mig"] == 0.0, cls.name
+    r = _sweep(lambda b: BFS(b), [78])
+    assert r[78]["evict_to_mig"] > 0.0       # algorithmic writebacks
+    fast = _sweep(lambda b: Gesummv(b), [109])[109]["evict_to_mig"]
+    slow = _sweep(lambda b: Stream(b), [109])[109]["evict_to_mig"]
+    assert fast > 0.9 > slow
+
+
+# ---------------------------------------------------------- fault behaviour
+
+def test_fault_density_ordering():
+    """Fig. 8: STREAM highest (150–250); Conv2d somewhat lower; Jacobi next;
+    SGEMM < 50; GESUMMV ≈ 20; BFS very low."""
+    dens = {}
+    for name in ("stream", "conv2d", "jacobi2d", "sgemm", "gesummv", "bfs"):
+        wl = make_workload(name, int(CAP * 1.09))
+        res = simulate(wl, CAP)
+        dens[name] = res.summary["mean_fault_density"]
+    assert 150 <= dens["stream"] <= 250
+    assert dens["conv2d"] < dens["stream"]
+    assert dens["jacobi2d"] < dens["conv2d"]
+    assert dens["sgemm"] < 50
+    assert 10 <= dens["gesummv"] <= 30
+    assert dens["bfs"] < 20
+
+
+def test_duplicate_fault_share():
+    """§2.1: duplicate faults represent 97–99 % of all faults for
+    high-occupancy streaming kernels."""
+    res = simulate(Stream(int(CAP * 0.78)), CAP)
+    assert 0.97 <= res.summary["duplicate_share"] <= 0.999
+
+
+def test_serviceable_faults_per_migration():
+    """Fig. 9d-f: ≈2 faulting pages per migration for STREAM; ≈0.05 for
+    thrashing GESUMMV (20 migrations per unique faulting page)."""
+    res = simulate(Stream(int(CAP * 1.09)), CAP)
+    assert res.summary["serviceable_per_migration"] == pytest.approx(2.0, abs=0.5)
+    res = simulate(Gesummv(int(CAP * 1.09)), CAP)
+    assert res.summary["serviceable_per_migration"] < 0.15
+
+
+# ---------------------------------------------------------- SVM-aware wins
+
+def test_svm_aware_jacobi():
+    """§4.1: SVM-aware Jacobi2d improves DOS=109 performance and the lower
+    limit (paper: >2x and 1.5x; serial-fault-service model reproduces the
+    direction with ≥1.4x / ≥1.15x — deviation documented in EXPERIMENTS.md)."""
+    naive = _sweep(lambda b: Jacobi2d(b), [78, 109, 300])
+    aware = _sweep(lambda b: Jacobi2d(b, svm_aware=True), [78, 109, 300])
+    assert aware[109]["norm_perf"] / naive[109]["norm_perf"] > 1.4
+    assert aware[300]["norm_perf"] / naive[300]["norm_perf"] > 1.15
+    assert aware[109]["evictions"] < 0.5 * naive[109]["evictions"]
+
+
+def test_svm_aware_sgemm():
+    """§4.1: SGEMM-svm-aware sustains ≈0.75+ at DOS=156 (orders of magnitude
+    over the collapsing naive version) and scales to DOS ≈ 300."""
+    naive = _sweep(lambda b: Sgemm(b), [78, 156])
+    aware = _sweep(lambda b: Sgemm(b, svm_aware=True), [78, 156, 280])
+    assert aware[156]["norm_perf"] > 0.7
+    assert aware[156]["norm_perf"] > 3 * naive[156]["norm_perf"]
+    assert aware[280]["norm_perf"] > 0.6     # still viable near DOS 300
+    assert aware[156]["migrations"] < 0.3 * naive[156]["migrations"]
