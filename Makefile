@@ -1,0 +1,17 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test bench bench-smoke bench-engine
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) benchmarks/run.py
+
+# CI smoke target: engine microbenchmark (scalar vs compiled-trace engine,
+# serial vs parallel sweep), writes BENCH_engine.json
+bench-smoke:
+	$(PY) benchmarks/bench_engine.py --smoke
+
+bench-engine:
+	$(PY) benchmarks/bench_engine.py

@@ -1,14 +1,20 @@
 """Benchmark harness: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows; artifacts land in
 results/bench/*.json. Additionally summarises the dry-run/roofline sweeps
-when their JSONL outputs exist."""
+when their JSONL outputs exist.
+
+Sweep figures run through the parallel sweep runner: ``--jobs N`` fans
+points across N worker processes (default: one per CPU, capped at 8) and
+``--no-cache`` disables the content-keyed incremental result cache."""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import paper_figs  # noqa: E402
@@ -38,8 +44,26 @@ def roofline_rows():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="sweep worker processes (default: CPUs, max 8; "
+                         "1 = serial)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the content-keyed sweep result cache")
+    ap.add_argument("--only", default=None,
+                    help="run only figure functions whose name contains "
+                         "this substring")
+    args = ap.parse_args()
+
+    paper_figs.JOBS = (min(os.cpu_count() or 1, 8) if args.jobs is None
+                       else args.jobs)
+    if args.no_cache:
+        paper_figs.CACHE_DIR = None
+
     print("name,us_per_call,derived")
     for fn in paper_figs.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.0f},{derived}", flush=True)

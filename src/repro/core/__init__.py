@@ -23,8 +23,10 @@ from repro.core.ranges import (
     split_allocation,
     svm_alignment,
 )
+from repro.core.engine import CompiledTrace, compile_trace, compile_workload, execute_compiled
 from repro.core.simulator import RunResult, Workload, apply_trace, dos_sweep, simulate
 from repro.core.svm import DensitySample, Event, SVMManager
+from repro.core.sweep import SweepPoint, run_point, run_sweep
 from repro.core.traces import WORKLOADS, make_workload
 from repro.core.uvm import UVMManager, VABLOCK
 
@@ -38,4 +40,6 @@ __all__ = [
     "UVMManager", "VABLOCK",
     "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
     "WORKLOADS", "make_workload",
+    "CompiledTrace", "compile_trace", "compile_workload", "execute_compiled",
+    "SweepPoint", "run_point", "run_sweep",
 ]

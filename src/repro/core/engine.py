@@ -1,0 +1,737 @@
+"""Compiled-trace engine — the fast execution tier for the SVM simulator.
+
+`apply_trace` walks a workload trace one op at a time through
+`SVMManager.touch`, paying full Python dispatch (dataclass construction,
+method calls, attribute chasing) on every op.  Reproducing one paper figure
+sweeps the Table-2 suite across DOS points × policies × §4.2 variants, so
+that per-op loop dominates `benchmarks/run.py` wall time.
+
+This module lowers a trace **once** into flat NumPy op arrays
+(opcode / rid / concurrency / page-hint / float-arg columns) and executes
+them with a batched interpreter:
+
+  * **Phase A** (structure): a lean, integer-only loop over the touch ops
+    of a span determines hits, misses, and the exact victim sequence,
+    mutating the live policy/residency state.  Resident hits — the paper's
+    97–99 % duplicate/hit common case — cost one set lookup.
+  * **Phase B** (accounting): all per-migration float work (five-term cost
+    model, wall trajectory, duplicate-fault synthesis, trigger pages,
+    profile events) is done vectorised with NumPy.  Sequential float
+    accumulation order is preserved bit-for-bit via ``np.cumsum`` (an exact
+    left-to-right fold) seeded with the manager's current accumulator
+    values, so `summary()` is **byte-identical** to the scalar path.
+  * Boundary ops (writeback / pin / unpin / zero-copy touches) and
+    unsupported driver variants (deferred granularity, pre-eviction
+    watermark, non-SVM managers) drop to the scalar `SVMManager` path,
+    op for op.
+
+Equivalence guarantee: for any trace and any manager configuration,
+executing the compiled trace leaves the manager with the same `summary()`,
+counters, residency set, free bytes, eviction order, and (under `profile`)
+the same `events`/`density` lists as `apply_trace`.  Two tolerated
+deviations: (1) the *stored* (never read) float timestamps inside LRF/LRU
+policy queues are patched to the correct wall values at span flush for all
+surviving entries; (2) eviction listeners / `eviction_epoch` fire at span
+flush rather than at each eviction's wall time — end-of-run totals are
+identical, but a listener sampling `mgr.wall` mid-run sees the span-end
+clock (drive the manager via `touch()` for per-eviction timing, as the
+streaming executor does).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import weakref
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.costmodel import CostParams, eviction_cost, migration_cost
+from repro.core.policies import LRF, LRU
+from repro.core.ranges import PAGE, AddressSpace
+from repro.core.svm import DensitySample, Event, SVMManager
+
+ENGINE_VERSION = "1"
+
+OP_TOUCH = 0
+OP_COMPUTE = 1
+OP_WRITEBACK = 2
+OP_PIN = 3
+OP_UNPIN = 4
+
+# spans shorter than this run through the scalar manager path: the NumPy
+# batch setup would cost more than it saves
+FAST_SPAN_MIN = 48
+
+
+@dataclasses.dataclass
+class CompiledTrace:
+    """A workload trace lowered to flat op columns (lowered once, executed
+    many times — e.g. across the policies × variants axes of a sweep)."""
+
+    codes: np.ndarray      # int8   — OP_* opcode per op
+    rids: np.ndarray       # int64  — range id (-1 where n/a)
+    concs: np.ndarray      # int64  — touch concurrency
+    hints: np.ndarray      # int64  — touch page hint
+    fargs: np.ndarray      # float64 — compute seconds
+    boundaries: np.ndarray  # int64 — indices of writeback/pin/unpin ops
+    # python-list mirrors of the touch stream (fast to iterate in Phase A)
+    touch_pos: list        # op index per touch
+    touch_rid: list        # rid per touch
+    touch_pos_np: np.ndarray
+    touch_rid_np: np.ndarray
+    n_ops: int             # source ops consumed (incl. kernel markers)
+    # per-span slices + uniqueness flags, memoised across executions
+    span_cache: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.codes)
+
+    def span(self, s: int, e: int):
+        """Touch-stream slice for ops [s, e): (pos_list, rid_list, pos_np,
+        rid_np, rids_unique). Cached — compiled traces are executed many
+        times (policy/variant axes of a sweep)."""
+        cached = self.span_cache.get((s, e))
+        if cached is None:
+            lo, hi = np.searchsorted(self.touch_pos_np, (s, e))
+            pos_np = self.touch_pos_np[lo:hi]
+            rid_np = self.touch_rid_np[lo:hi]
+            rid_l = self.touch_rid[lo:hi]
+            uniq = len(np.unique(rid_np)) == len(rid_np)
+            cached = (self.touch_pos[lo:hi], rid_l, pos_np, rid_np, uniq)
+            self.span_cache[(s, e)] = cached
+        return cached
+
+
+def compile_trace(trace: Iterable, max_ops: int | None = None) -> CompiledTrace:
+    """Lower a lazy op trace into flat columns.
+
+    Kernel markers are consumed (they count toward ``max_ops``, matching
+    `apply_trace`) but not materialised.
+    """
+    if max_ops is not None:
+        trace = itertools.islice(trace, max_ops)
+    codes: list[int] = []
+    rids: list[int] = []
+    concs: list[int] = []
+    hints: list[int] = []
+    fargs: list[float] = []
+    n_src = 0
+    for op in trace:
+        n_src += 1
+        tag = op[0]
+        if tag == "touch":
+            codes.append(OP_TOUCH)
+            rids.append(op[1])
+            concs.append(op[2])
+            hints.append(op[3] or 0)
+            fargs.append(0.0)
+        elif tag == "compute":
+            codes.append(OP_COMPUTE)
+            rids.append(-1)
+            concs.append(0)
+            hints.append(0)
+            fargs.append(op[1])
+        elif tag == "kernel":
+            continue
+        elif tag == "writeback":
+            codes.append(OP_WRITEBACK)
+            rids.append(op[1])
+            concs.append(0)
+            hints.append(0)
+            fargs.append(0.0)
+        elif tag == "pin":
+            codes.append(OP_PIN)
+            rids.append(op[1])
+            concs.append(0)
+            hints.append(0)
+            fargs.append(0.0)
+        elif tag == "unpin":
+            codes.append(OP_UNPIN)
+            rids.append(op[1])
+            concs.append(0)
+            hints.append(0)
+            fargs.append(0.0)
+        else:
+            raise ValueError(f"unknown trace op {tag!r}")
+    code_arr = np.array(codes, dtype=np.int8)
+    rid_arr = np.array(rids, dtype=np.int64)
+    touch_mask = code_arr == OP_TOUCH
+    touch_pos_np = np.nonzero(touch_mask)[0]
+    touch_rid_np = rid_arr[touch_mask]
+    return CompiledTrace(
+        codes=code_arr,
+        rids=rid_arr,
+        concs=np.array(concs, dtype=np.int64),
+        hints=np.array(hints, dtype=np.int64),
+        fargs=np.array(fargs, dtype=np.float64),
+        boundaries=np.nonzero(code_arr >= OP_WRITEBACK)[0],
+        touch_pos=touch_pos_np.tolist(),
+        touch_rid=touch_rid_np.tolist(),
+        touch_pos_np=touch_pos_np,
+        touch_rid_np=touch_rid_np,
+        n_ops=n_src,
+    )
+
+
+def compile_workload(workload, space: AddressSpace,
+                     max_ops: int | None = None) -> CompiledTrace:
+    return compile_trace(workload.trace(space), max_ops=max_ops)
+
+
+# --------------------------------------------------------------- cost tables
+
+# per-AddressSpace static tables, shared by every execution over that space
+_SPACE_TABLES: "weakref.WeakKeyDictionary[AddressSpace, dict]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _tables(space: AddressSpace, params: CostParams) -> dict:
+    tab = _SPACE_TABLES.get(space)
+    if tab is None or tab["n_ranges"] != len(space.ranges):
+        size_arr = np.array([r.end - r.start for r in space.ranges],
+                            dtype=np.int64)
+        tab = {
+            "n_ranges": len(space.ranges),
+            "sizes": size_arr.tolist(),
+            "size_arr": size_arr,
+            "alloc_ids": [r.alloc_id for r in space.ranges],
+            "pages": np.array([r.start // PAGE for r in space.ranges],
+                              dtype=np.int64),
+            "params": {},
+        }
+        _SPACE_TABLES[space] = tab
+    per_params = tab["params"].get(params)
+    if per_params is None:
+        usz = np.unique(tab["size_arr"])
+        # migration_cost is a pure function of (size, params): memoised
+        # values are bit-identical to what the scalar path computes fresh
+        mcs = [migration_cost(int(s), params) for s in usz.tolist()]
+        per_params = {
+            "usz": usz,
+            "terms": np.array([[m.cpu_unmap, m.sdma_setup, m.alloc,
+                                m.cpu_update, m.misc] for m in mcs]),
+            "ecs": np.array([eviction_cost(int(s), params)
+                             for s in usz.tolist()]),
+            "sizeidx": np.searchsorted(usz, tab["size_arr"]),
+        }
+        tab["params"][params] = per_params
+    return {**tab, **per_params}
+
+
+# ----------------------------------------------------------------- execution
+
+def _fast_supported(mgr) -> bool:
+    if type(mgr) is not SVMManager:
+        return False
+    if mgr.defer_granule and mgr.defer_k > 0:
+        return False
+    if mgr.previct_watermark > 0.0:
+        return False
+    return True
+
+
+def execute_compiled(ct: CompiledTrace, mgr) -> None:
+    """Apply a compiled trace to a manager; equivalent to `apply_trace`."""
+    if not _fast_supported(mgr):
+        _replay(ct, mgr, 0, len(ct))
+        return
+
+    # dynamic boundaries: touches on zero-copy allocations take the scalar
+    # path (they charge remote-access cost instead of migrating)
+    bounds = ct.boundaries
+    if mgr.zero_copy_allocs:
+        zc_rids = {r.rid for r in mgr.space.ranges
+                   if r.alloc_id in mgr.zero_copy_allocs}
+        if zc_rids:
+            zc_mask = np.zeros(len(mgr.space.ranges), dtype=bool)
+            zc_mask[list(zc_rids)] = True
+            touch_zc = (ct.codes == OP_TOUCH) & zc_mask[np.clip(ct.rids, 0,
+                                                                None)]
+            bounds = np.union1d(bounds, np.nonzero(touch_zc)[0])
+
+    pos = 0
+    for b in bounds.tolist():
+        _run_span(ct, mgr, pos, b)
+        _exec_boundary(ct, mgr, b)
+        pos = b + 1
+    _run_span(ct, mgr, pos, len(ct))
+
+
+def _exec_boundary(ct: CompiledTrace, mgr, k: int) -> None:
+    code = ct.codes[k]
+    rid = int(ct.rids[k])
+    if code == OP_TOUCH:          # zero-copy touch
+        mgr.touch(rid, concurrency=int(ct.concs[k]),
+                  page_hint=int(ct.hints[k]))
+    elif code == OP_WRITEBACK:
+        mgr.writeback(rid)
+    elif code == OP_PIN:
+        mgr.pin(rid)
+    elif code == OP_UNPIN:
+        mgr.unpin(rid)
+
+
+def _replay(ct: CompiledTrace, mgr, s: int, e: int) -> None:
+    """Scalar fallback: dispatch ops one by one through the manager."""
+    codes = ct.codes
+    rids = ct.rids
+    for k in range(s, e):
+        code = codes[k]
+        if code == OP_TOUCH:
+            mgr.touch(int(rids[k]), concurrency=int(ct.concs[k]),
+                      page_hint=int(ct.hints[k]))
+        elif code == OP_COMPUTE:
+            mgr.advance(float(ct.fargs[k]))
+        else:
+            _exec_boundary(ct, mgr, k)
+
+
+def _run_span(ct: CompiledTrace, mgr, s: int, e: int) -> None:
+    if e <= s:
+        return
+    if e - s < FAST_SPAN_MIN:
+        _replay(ct, mgr, s, e)
+        return
+    tpos, trid, tpos_np, trid_np, uniq = ct.span(s, e)
+    tab = _tables(mgr.space, mgr.params)
+    struct = None
+    if type(mgr.policy) is LRF and not mgr.pinned and len(trid):
+        # vectorised LRF fast paths, gated on a residency bitmap
+        mask = np.zeros(tab["n_ranges"], dtype=bool)
+        resident = mgr.resident
+        if resident:
+            mask[np.fromiter(resident, dtype=np.int64,
+                             count=len(resident))] = True
+        u, first_idx = np.unique(trid_np, return_index=True)
+        miss_u = ~mask[u]
+        need = int(tab["size_arr"][u[miss_u]].sum())
+        if need <= mgr.free:
+            # no eviction possible: misses are exactly the first touches
+            # of the non-resident ranges, hits are LRF no-ops
+            struct = _phase_a_lrf_noevict(
+                mgr, tpos_np, trid_np, first_idx[miss_u], need)
+        else:
+            # eviction-pressure span: solve the FIFO dynamics in closed
+            # form under the every-touch-misses hypothesis and validate it
+            # vectorised (holds for linear streaming AND full thrash);
+            # falls back to the sequential loop on mixed hit/miss spans
+            prev = None
+            if not uniq:
+                prev = ct.span_cache.get(("prev", s, e))
+                if prev is None:
+                    order = np.argsort(trid_np, kind="stable")
+                    srid = trid_np[order]
+                    prev = np.full(len(trid_np), -1, dtype=np.int64)
+                    same = srid[1:] == srid[:-1]
+                    prev[order[1:][same]] = order[:-1][same]
+                    ct.span_cache[("prev", s, e)] = prev
+            struct = _phase_a_lrf_streaming(mgr, tpos_np, trid, trid_np,
+                                            tab, mask, prev)
+    if struct is None:
+        # the sequential passes mutate live state as they go; snapshot so
+        # a mid-span device-full error can be replayed through the scalar
+        # path, which raises with fully consistent partial manager state
+        snap = _snapshot(mgr)
+        try:
+            if type(mgr.policy) is LRF:
+                struct = _phase_a_lrf(mgr, tpos, trid, tab)
+            else:
+                struct = _phase_a_generic(mgr, tpos, trid, tab)
+        except RuntimeError:
+            _restore(mgr, snap)
+            _replay(ct, mgr, s, e)    # re-raises at the same op, scalar
+            raise                     # unreachable: replay must raise too
+    _phase_b(ct, mgr, s, e, tab, *struct)
+
+
+# ------------------------------------------------------ phase A — structure
+
+def _snapshot(mgr):
+    policy = mgr.policy
+    q = getattr(policy, "_q", None)
+    if q is not None:
+        pstate = ("q", list(q.items()))
+    elif getattr(policy, "_order", None) is not None:
+        pstate = ("order", list(policy._order.items()))
+    elif getattr(policy, "_set", None) is not None:
+        pstate = ("set", list(policy._set), policy._rng.getstate())
+    else:
+        import copy
+        pstate = ("deep", copy.deepcopy(policy))
+    return set(mgr.resident), mgr.free, pstate
+
+
+def _restore(mgr, snap):
+    resident, free, pstate = snap
+    mgr.resident.clear()
+    mgr.resident.update(resident)
+    mgr.free = free
+    policy = mgr.policy
+    if pstate[0] == "q":
+        policy._q.clear()
+        policy._q.update(pstate[1])
+    elif pstate[0] == "order":
+        policy._order.clear()
+        policy._order.update(pstate[1])
+    elif pstate[0] == "set":
+        policy._set.clear()
+        policy._set.update((r, None) for r in pstate[1])
+        policy._rng.setstate(pstate[2])
+    else:
+        mgr.policy = pstate[1]
+
+
+def _phase_a_lrf_noevict(mgr, tpos_np, trid_np, miss_first_idx, need):
+    """Vectorised Phase A for LRF spans that cannot evict (the touched
+    working set fits in free bytes): misses are the first occurrences of
+    non-resident rids, in touch order; every other touch is a hit, which
+    LRF ignores by construction."""
+    idx = np.sort(miss_first_idx)
+    m_rid = trid_np[idx]
+    m_pos = tpos_np[idx]
+    rid_list = m_rid.tolist()
+    mgr.free -= need
+    mgr.resident.update(rid_list)
+    q = mgr.policy._q
+    for rid in rid_list:
+        q[rid] = 0.0
+    return m_pos, m_rid, np.zeros(len(idx), dtype=np.int64), [], None
+
+
+def _phase_a_lrf_streaming(mgr, tpos_np, trid, trid_np, tab, mask, prev):
+    """Closed-form Phase A for all-miss spans under LRF.
+
+    Hypothesis: every touch in the span is a miss.  LRF then degenerates
+    to FIFO, the victim stream is exactly [current queue] + [migrated
+    ranges, in touch order], and each migration's eviction count falls out
+    of one ``searchsorted`` over the two byte cumsums.  The hypothesis is
+    then validated vectorised — every re-touch (``prev``) and every
+    initially-resident touch must have been evicted before its hit check —
+    covering both linear streaming (Category I) and full cyclic thrash
+    (Categories II/III at high DOS).  Returns None (no state mutated) when
+    the span actually contains hits or would exhaust evictable ranges.
+    """
+    q = mgr.policy._q
+    sizes_arr = tab["size_arr"]
+    n = len(trid_np)
+    n_q0 = len(q)
+    if n_q0:
+        cand = np.concatenate([np.fromiter(q, dtype=np.int64, count=n_q0),
+                               trid_np])
+    else:
+        cand = trid_np
+    cv = np.concatenate(([0], np.cumsum(sizes_arr[cand])))
+    cs = np.cumsum(sizes_arr[trid_np])
+    e_arr = np.searchsorted(cv, cs - mgr.free, side="left")
+    if (e_arr > n_q0 + np.arange(n)).any():
+        return None        # would need to evict not-yet-migrated ranges
+    # eviction frontier *before* each touch's hit check
+    e_prev = np.empty(n, dtype=np.int64)
+    e_prev[0] = 0
+    e_prev[1:] = e_arr[:-1]
+    if prev is not None:
+        nf = prev >= 0
+        if nf.any() and (n_q0 + prev[nf] >= e_prev[nf]).any():
+            return None    # a re-touched range would still be resident
+    if n_q0:
+        r0 = mask[trid_np]
+        if prev is not None:
+            r0 &= prev < 0
+        ks = np.nonzero(r0)[0]
+        if len(ks):
+            q0pos = {rid: i for i, rid in enumerate(q)}
+            for k, e in zip(ks.tolist(), e_prev[ks].tolist()):
+                p = q0pos.get(trid[k])
+                if p is None or p >= e:
+                    return None   # an initially-resident touch would hit
+
+    n_evt = int(e_arr[-1])
+    victims = cand[:n_evt].tolist()
+    nev = e_arr.copy()
+    nev[1:] -= e_arr[:-1]
+
+    # state update: the survivors are exactly cand[n_evt:], in order;
+    # surviving pre-existing queue entries keep their timestamps
+    mgr.free = int(mgr.free + int(cv[n_evt]) - int(cs[-1]))
+    old_items = list(q.items())[n_evt:] if n_evt < n_q0 else []
+    q.clear()
+    for rid, t in old_items:
+        q[rid] = t
+    for rid in trid[max(n_evt - n_q0, 0):]:
+        q[rid] = 0.0
+    resident = mgr.resident
+    resident.clear()
+    resident.update(q)
+    return tpos_np, trid_np, nev, victims, None
+
+
+def _phase_a_lrf(mgr, tpos, trid, tab):
+    """Integer-only hit/miss/victim resolution for the default LRF policy.
+
+    Operates directly on the live policy queue (an OrderedDict whose key
+    order IS the FIFO victim order); float timestamps are patched in
+    phase B.  A miss rid is never queued (queue ⊆ resident), so insertion
+    is a plain assignment.
+    """
+    q = mgr.policy._q
+    popitem = q.popitem
+    resident = mgr.resident
+    res_add = resident.add
+    res_disc = resident.discard
+    pinned = mgr.pinned
+    sizes = tab["sizes"]
+    free = mgr.free
+    miss_pos: list[int] = []
+    miss_rid: list[int] = []
+    vends: list[int] = []
+    victims: list[int] = []
+    mp = miss_pos.append
+    ma = miss_rid.append
+    na = vends.append
+    va = victims.append
+    n_victims = 0
+    for i, rid in enumerate(trid):
+        if rid in resident:
+            continue
+        nbytes = sizes[rid]
+        while free < nbytes:
+            if not q:
+                raise RuntimeError(
+                    "SVM: device full of pinned/unevictable ranges "
+                    f"(free={free}, need more; pinned={len(pinned)})")
+            victim, _ = popitem(False)
+            res_disc(victim)
+            free += sizes[victim]
+            va(victim)
+            n_victims += 1
+        free -= nbytes
+        res_add(rid)
+        if rid not in pinned:
+            q[rid] = 0.0
+        mp(tpos[i])
+        ma(rid)
+        na(n_victims)
+    mgr.free = free
+    nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
+    return miss_pos, miss_rid, nev, victims, None
+
+
+def _phase_a_generic(mgr, tpos, trid, tab):
+    """Policy-agnostic structure pass: same call sequence as the scalar path
+    (victim → remove → insert), so stateful policies (CLOCK second-chance
+    sweeps, RANDOM rng draws) stay in lockstep."""
+    policy = mgr.policy
+    on_touch = policy.on_touch
+    track = isinstance(policy, LRU)
+    lastpos: dict[int, int] = {}
+    resident = mgr.resident
+    pinned = mgr.pinned
+    sizes = tab["sizes"]
+    free = mgr.free
+    miss_pos: list[int] = []
+    miss_rid: list[int] = []
+    vends: list[int] = []
+    victims: list[int] = []
+    n_victims = 0
+    for i, rid in enumerate(trid):
+        if rid in resident:
+            on_touch(rid, 0.0)
+            if track:
+                lastpos[rid] = tpos[i]
+            continue
+        nbytes = sizes[rid]
+        while free < nbytes:
+            if len(policy) == 0:
+                raise RuntimeError(
+                    "SVM: device full of pinned/unevictable ranges "
+                    f"(free={free}, need more; pinned={len(pinned)})")
+            victim = policy.victim()
+            policy.remove(victim)
+            resident.discard(victim)
+            free += sizes[victim]
+            victims.append(victim)
+            n_victims += 1
+        free -= nbytes
+        resident.add(rid)
+        if rid not in pinned:
+            policy.insert(rid, 0.0)
+            if track:
+                lastpos[rid] = tpos[i]
+        miss_pos.append(tpos[i])
+        miss_rid.append(rid)
+        vends.append(n_victims)
+    mgr.free = free
+    nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
+    return miss_pos, miss_rid, nev, victims, (lastpos if track else None)
+
+
+# ----------------------------------------------------- phase B — accounting
+
+def _phase_b(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims, lastpos):
+    """Vectorised, bit-exact float accounting for one span.
+
+    Every accumulator fold is seeded with the manager's current value and
+    realised with ``np.cumsum`` (an exact sequential fold), so the result
+    equals the scalar path's `+=` chain bit for bit.
+    """
+    fargs = ct.fargs[s:e]
+    M = len(miss_pos)
+    cost = mgr.cost
+    if M == 0:
+        traj = np.cumsum(np.concatenate(([mgr.wall], fargs)))
+        mgr.wall = float(traj[-1])
+        mgr.compute_time = float(
+            np.cumsum(np.concatenate(([mgr.compute_time], fargs)))[-1])
+        if lastpos:
+            q = getattr(mgr.policy, "_q", None)
+            if q is not None:
+                for rid, k in lastpos.items():
+                    if rid in q:
+                        q[rid] = float(traj[k - s + 1])
+        return
+
+    m_pos = np.asarray(miss_pos, dtype=np.int64)
+    m_rid = np.asarray(miss_rid, dtype=np.int64)
+    m_nev = np.asarray(nev, dtype=np.int64)
+    v_rid = np.asarray(victims, dtype=np.int64)
+    miss_rid_l = miss_rid.tolist() if isinstance(miss_rid, np.ndarray) \
+        else miss_rid
+    sizeidx = tab["sizeidx"]
+    terms = tab["terms"][sizeidx[m_rid]]            # (M, 5)
+    t1, t2, t3, t4, t5 = terms.T
+    ec_v = tab["ecs"][sizeidx[v_rid]] if len(v_rid) else np.zeros(0)
+
+    # fold eviction costs into each migration's alloc term, preserving the
+    # scalar path's per-eviction add order (0/1 evictions vectorised)
+    alloc = t3.copy()
+    ends = np.cumsum(m_nev)
+    starts = ends - m_nev
+    one = m_nev == 1
+    if one.any():
+        alloc[one] = t3[one] + ec_v[starts[one]]
+    for i in np.nonzero(m_nev > 1)[0].tolist():
+        a = alloc[i]
+        for j in range(starts[i], ends[i]):
+            a += ec_v[j]
+        alloc[i] = a
+    total = (((t1 + t2) + alloc) + t4) + t5
+
+    if mgr.parallel_evict:
+        # §4.2 parallel implementation: overlap evictions with the blocked
+        # migration (plus lock/rollback overhead)
+        base = (((t1 + t2) + t3) + t4) + t5
+        evw = np.zeros(M)
+        if one.any():
+            evw[one] = ec_v[starts[one]]
+        for i in np.nonzero(m_nev > 1)[0].tolist():
+            a = 0.0
+            for j in range(starts[i], ends[i]):
+                a += ec_v[j]
+            evw[i] = a
+        total = np.where(m_nev > 0, np.maximum(base, evw) + 5e-6, base)
+
+    # wall trajectory over the whole span (compute ops interleave misses;
+    # hit ops contribute +0.0, which is add-identity for finite wall)
+    deltas = fargs.copy()
+    rel_pos = m_pos - s
+    deltas[rel_pos] = total
+    traj = np.cumsum(np.concatenate(([mgr.wall], deltas)))
+    mgr.wall = float(traj[-1])
+    mgr.compute_time = float(
+        np.cumsum(np.concatenate(([mgr.compute_time], fargs)))[-1])
+
+    # five-term cost ledger: one stacked exact fold, seeded with the
+    # current accumulator values
+    ledger = np.empty((M + 1, 5))
+    ledger[0] = (cost.cpu_unmap, cost.sdma_setup, cost.alloc,
+                 cost.cpu_update, cost.misc)
+    ledger[1:, 0] = t1
+    ledger[1:, 1] = t2
+    ledger[1:, 2] = alloc
+    ledger[1:, 3] = t4
+    ledger[1:, 4] = t5
+    (cost.cpu_unmap, cost.sdma_setup, cost.alloc, cost.cpu_update,
+     cost.misc) = np.cumsum(ledger, axis=0)[-1].tolist()
+    if len(ec_v):
+        mgr.evict_cost_total = float(
+            np.cumsum(np.concatenate(([mgr.evict_cost_total], ec_v)))[-1])
+
+    # counters
+    nmig0 = mgr.n_migrations
+    mgr.n_migrations = nmig0 + M
+    mgr.n_evictions += len(victims)
+    msz = tab["size_arr"][m_rid]
+    mgr.bytes_migrated += int(msz.sum())
+    if len(v_rid):
+        mgr.bytes_evicted += int(tab["size_arr"][v_rid].sum())
+    mgr.faults_serviceable += M
+
+    # duplicate faults: same deterministic jitter as SVMManager._noise
+    conc_m = ct.concs[m_pos]
+    kk = np.arange(nmig0 + 1, nmig0 + M + 1, dtype=np.uint64)
+    h = (kk * np.uint64(2654435761)
+         + np.uint64((mgr._seed * 97) & 0xFFFFFFFF)) & np.uint64(0xFFFFFFFF)
+    noise = 0.8 + 0.4 * (h.astype(np.float64) / float(0xFFFFFFFF))
+    dup = (conc_m * noise).astype(np.int64) - 1
+    np.clip(dup, 0, None, out=dup)
+    mgr.faults_duplicate += int(dup.sum())
+
+    # trigger pages
+    trig = tab["pages"][m_rid] + ct.hints[m_pos]
+    high = conc_m >= 32
+    if high.any():
+        mgr.trigger_pages.update(
+            np.concatenate([trig, trig[high] + 1]).tolist())
+    else:
+        mgr.trigger_pages.update(trig.tolist())
+
+    # eviction notification (push-based listeners + epoch, fired at flush)
+    if victims:
+        mgr.eviction_epoch += len(victims)
+        if mgr._evict_listeners:
+            for v in victims:
+                for cb in mgr._evict_listeners:
+                    cb(v)
+
+    # patch the (write-only) policy timestamps of surviving queue entries
+    q = getattr(mgr.policy, "_q", None)
+    if q is not None:
+        if lastpos is None:           # LRF: inserts happen only on misses
+            wall_at = traj[rel_pos + 1].tolist()
+            for rid, w in zip(miss_rid_l, wall_at):
+                if rid in q:
+                    q[rid] = w
+        else:
+            for rid, k in lastpos.items():
+                if rid in q:
+                    q[rid] = float(traj[k - s + 1])
+
+    if mgr.profile:
+        _emit_profile(ct, mgr, s, tab, traj, m_pos, miss_rid_l, starts, ends,
+                      victims, dup, trig)
+
+
+def _emit_profile(ct, mgr, s, tab, traj, m_pos, miss_rid, starts, ends,
+                  victims, dup, trig):
+    events = mgr.events
+    density = mgr.density
+    alloc_ids = tab["alloc_ids"]
+    sizes = tab["sizes"]
+    traj_l = traj.tolist()
+    pos_l = (m_pos - s).tolist()
+    starts_l = starts.tolist()
+    ends_l = ends.tolist()
+    dup_l = dup.tolist()
+    trig_l = trig.tolist()
+    for i, rid in enumerate(miss_rid):
+        j = pos_l[i]
+        w_before = traj_l[j]
+        w_after = traj_l[j + 1]
+        for vi in range(starts_l[i], ends_l[i]):
+            v = victims[vi]
+            events.append(Event(w_before, "evt", v, alloc_ids[v], sizes[v]))
+        events.append(Event(w_after, "mig", rid, alloc_ids[rid], sizes[rid]))
+        density.append(DensitySample(w_after, rid, alloc_ids[rid],
+                                     1 + dup_l[i], trig_l[i]))

@@ -75,8 +75,19 @@ def simulate(
     max_ops: int | None = None,
     manager_cls=SVMManager,
     zero_copy_alloc_names: tuple = (),
+    engine: str = "batched",
     **mgr_kwargs,
 ) -> RunResult:
+    """Simulate one workload run.
+
+    ``engine="batched"`` lowers the trace through the compiled-trace engine
+    (`repro.core.engine`) — bit-identical to the scalar path, typically an
+    order of magnitude faster; ``engine="scalar"`` forces the per-op
+    `apply_trace` loop (also used automatically for non-SVM managers and
+    driver variants the fast tier does not model)."""
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "available: 'batched', 'scalar'")
     space = AddressSpace(capacity_bytes, base=base)
     workload.build(space)
     mgr = manager_cls(space, policy=policy, params=params, profile=profile,
@@ -84,7 +95,13 @@ def simulate(
     for a in space.allocations:
         if a.name in zero_copy_alloc_names:
             mgr.set_zero_copy(a.alloc_id)
-    apply_trace(mgr, workload.trace(space), max_ops=max_ops)
+    use_engine = engine == "batched" and manager_cls is SVMManager
+    if use_engine:
+        from repro.core.engine import compile_workload, execute_compiled
+        execute_compiled(compile_workload(workload, space, max_ops=max_ops),
+                         mgr)
+    else:
+        apply_trace(mgr, workload.trace(space), max_ops=max_ops)
     wall = max(mgr.wall, 1e-12)
     return RunResult(
         workload=workload.name,
@@ -130,25 +147,53 @@ def dos_sweep(
     normalize_at: float = 78.0,
     policy: str = "lrf",
     params: CostParams = MI250X,
+    engine: str = "batched",
+    jobs: int = 0,
     **mgr_kwargs,
 ) -> list[dict]:
     """Run a workload at several problem sizes (expressed as target DOS %)
     and report throughput normalised to the `normalize_at` point
-    (paper Fig. 6)."""
-    rows = []
+    (paper Fig. 6).
+
+    ``make_workload`` is either a callable ``bytes -> Workload`` (run
+    serially in-process) or a picklable spec tuple ``(name, kwargs)``
+    resolved via `repro.core.traces.make_workload`, which additionally
+    allows fanning the DOS points out across ``jobs`` worker processes
+    (see `repro.core.sweep`)."""
+    dos_values = list(dos_values)
+    if not callable(make_workload):
+        from repro.core.sweep import SweepPoint, run_sweep
+        name, wl_kwargs = make_workload
+        points = [
+            SweepPoint.make(name, capacity_bytes * dos / 100.0,
+                            capacity_bytes, policy=policy,
+                            wl_kwargs=dict(wl_kwargs),
+                            mgr_kwargs=mgr_kwargs, engine=engine)
+            for dos in dos_values
+        ]
+        rows = run_sweep(points, jobs=jobs, params=params)
+    else:
+        rows = []
+        for dos in dos_values:
+            wl = make_workload(int(capacity_bytes * dos / 100.0))
+            res = simulate(wl, capacity_bytes, policy=policy, params=params,
+                           profile=False, engine=engine, **mgr_kwargs)
+            rows.append(res.row())
     base_thr = None
-    for dos in list(dos_values):
-        wl = make_workload(int(capacity_bytes * dos / 100.0))
-        res = simulate(wl, capacity_bytes, policy=policy, params=params,
-                       profile=False, **mgr_kwargs)
-        row = res.row()
-        rows.append(row)
+    for dos, row in zip(dos_values, rows):
         if abs(dos - normalize_at) < 1e-9:
-            base_thr = res.throughput
-    if base_thr is None:  # fall back to the first point
-        wl = make_workload(int(capacity_bytes * normalize_at / 100.0))
+            base_thr = row["throughput"]
+    if base_thr is None:  # fall back to an extra run at the anchor point
+        if not callable(make_workload):
+            name, wl_kwargs = make_workload
+            from repro.core.traces import make_workload as _mk
+            wl = _mk(name, int(capacity_bytes * normalize_at / 100.0),
+                     **dict(wl_kwargs))
+        else:
+            wl = make_workload(int(capacity_bytes * normalize_at / 100.0))
         base_thr = simulate(wl, capacity_bytes, policy=policy, params=params,
-                            profile=False, **mgr_kwargs).throughput
+                            profile=False, engine=engine,
+                            **mgr_kwargs).throughput
     for row in rows:
         row["norm_perf"] = row["throughput"] / base_thr
     return rows

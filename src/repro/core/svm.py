@@ -128,6 +128,13 @@ class SVMManager:
         self.events: list[Event] = []
         self.density: list[DensitySample] = []
 
+        # push-based eviction notification: callbacks fire with the evicted
+        # rid, and the epoch counter bumps once per eviction, so clients
+        # (e.g. the streaming executor's device pool) can invalidate only
+        # what actually changed instead of rescanning residency
+        self.eviction_epoch = 0
+        self._evict_listeners: list = []
+
     # ------------------------------------------------------------------ api
 
     def pin(self, rid: int) -> None:
@@ -147,6 +154,32 @@ class SVMManager:
     def set_zero_copy(self, alloc_id: int) -> None:
         """Mark an allocation host-pinned / zero-copy (paper §4.2)."""
         self.zero_copy_allocs.add(alloc_id)
+
+    def add_evict_listener(self, callback) -> None:
+        """Register ``callback(rid)`` to fire whenever a range is evicted."""
+        self._evict_listeners.append(callback)
+
+    def previct(self, rid: int, *, overlap: float = 0.0) -> float:
+        """Pre-evict a specific resident range off the migration critical
+        path (background eviction, cf. §4.2 / Li et al. ASPLOS'19).
+
+        ``overlap`` is the fraction of the eviction cost hidden behind
+        concurrent compute; the remainder lands on the wall clock.  Returns
+        the full eviction cost (0.0 if the range was not evictable)."""
+        if rid not in self.resident or rid in self.pinned:
+            return 0.0
+        w = self._evict(rid, charge=None)
+        self.wall += w * (1.0 - overlap)
+        return w
+
+    def spill_oldest(self, *, overlap: float = 0.0) -> int | None:
+        """Pre-evict the policy's current victim (oldest under LRF/FIFO);
+        returns its rid, or None when nothing is evictable."""
+        if len(self.policy) == 0:
+            return None
+        victim = self.policy.victim()
+        self.previct(victim, overlap=overlap)
+        return victim
 
     def advance(self, seconds: float) -> None:
         """Pure device compute time (no driver involvement)."""
@@ -296,6 +329,10 @@ class SVMManager:
         self.free += r.size
         self.n_evictions += 1
         self.bytes_evicted += r.size
+        self.eviction_epoch += 1
+        if self._evict_listeners:
+            for cb in self._evict_listeners:
+                cb(rid)
         if self.profile:
             self.events.append(Event(self.wall, "evt", rid, r.alloc_id, r.size))
         return ec

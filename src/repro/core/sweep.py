@@ -1,0 +1,195 @@
+"""Parallel scenario-sweep runner with a content-keyed result cache.
+
+The paper's headline figures (6–10) are grids over
+(workload × DOS × policy × §4.2 driver variant).  Points are independent,
+so the runner fans them out across a ``ProcessPoolExecutor`` and memoises
+each point's result row on disk, keyed by the *content* of the scenario:
+the point spec, the cost-model parameters, and a digest of the simulator
+sources.  Re-running a figure suite after a code change recomputes only
+what the change invalidates; re-running unchanged figures is pure cache
+hits.
+
+Points are plain data (workload *name* + kwargs, resolved via
+`repro.core.traces.make_workload` inside the worker), so they pickle
+cleanly and hash stably.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Iterable, Sequence
+
+from repro.core.costmodel import CostParams, MI250X
+
+_CODE_DIGEST: str | None = None
+
+
+def _code_digest() -> str:
+    """Digest of the simulator sources: part of every cache key, so cached
+    rows invalidate when the model code changes."""
+    global _CODE_DIGEST
+    if _CODE_DIGEST is None:
+        h = hashlib.sha256()
+        core = os.path.dirname(os.path.abspath(__file__))
+        for fn in sorted(os.listdir(core)):
+            if fn.endswith(".py"):
+                with open(os.path.join(core, fn), "rb") as f:
+                    h.update(f.read())
+        _CODE_DIGEST = h.hexdigest()[:16]
+    return _CODE_DIGEST
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One scenario: a workload instance against one driver configuration.
+
+    ``wl_kwargs``/``mgr_kwargs`` are sorted ``(key, value)`` tuples so the
+    point is hashable and its JSON form is canonical.  ``zero_copy`` is a
+    tuple of allocation names, or the sentinel ``"biggest"`` (resolved in
+    the worker to the workload's largest allocation)."""
+
+    workload: str
+    total_bytes: int
+    capacity: int
+    policy: str = "lrf"
+    wl_kwargs: tuple = ()
+    mgr_kwargs: tuple = ()
+    zero_copy: tuple | str = ()
+    engine: str = "batched"
+    profile: bool = False
+
+    @classmethod
+    def make(cls, workload: str, total_bytes: int, capacity: int, *,
+             policy: str = "lrf", wl_kwargs: dict | None = None,
+             mgr_kwargs: dict | None = None,
+             zero_copy: tuple | str = (), engine: str = "batched",
+             profile: bool = False) -> "SweepPoint":
+        """Build a point from plain dict kwargs, owning the sorted-tuple
+        normalisation so every call site produces identical cache keys."""
+        return cls(workload=workload, total_bytes=int(total_bytes),
+                   capacity=capacity, policy=policy,
+                   wl_kwargs=tuple(sorted((wl_kwargs or {}).items())),
+                   mgr_kwargs=tuple(sorted((mgr_kwargs or {}).items())),
+                   zero_copy=zero_copy, engine=engine, profile=profile)
+
+    def key(self, params: CostParams) -> str:
+        blob = json.dumps(
+            [dataclasses.astuple(self), dataclasses.astuple(params),
+             _code_digest()],
+            sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def run_point(point: SweepPoint, params: CostParams = MI250X) -> dict:
+    """Execute one sweep point; returns the flat result row."""
+    from repro.core.ranges import AddressSpace
+    from repro.core.simulator import simulate
+    from repro.core.traces import make_workload
+
+    wl_kwargs = dict(point.wl_kwargs)
+    zero_copy = point.zero_copy
+    if zero_copy == "biggest":
+        probe = AddressSpace(point.capacity, base=175 * 1024 * 1024)
+        make_workload(point.workload, point.total_bytes,
+                      **wl_kwargs).build(probe)
+        zero_copy = (max(probe.allocations, key=lambda a: a.size).name,)
+    res = simulate(
+        make_workload(point.workload, point.total_bytes, **wl_kwargs),
+        point.capacity,
+        policy=point.policy,
+        params=params,
+        profile=point.profile,
+        engine=point.engine,
+        zero_copy_alloc_names=tuple(zero_copy),
+        **dict(point.mgr_kwargs),
+    )
+    return res.row()
+
+
+def _run_point_job(args: tuple) -> tuple[int, dict]:
+    idx, point, params = args
+    return idx, run_point(point, params)
+
+
+def run_sweep(
+    points: Sequence[SweepPoint] | Iterable[SweepPoint],
+    *,
+    jobs: int | None = 0,
+    params: CostParams = MI250X,
+    cache_dir: str | None = None,
+    stats: dict | None = None,
+) -> list[dict]:
+    """Run a grid of sweep points, in order-preserving fashion.
+
+    ``jobs``: 0/1 = serial in-process, None = one worker per CPU, N = N
+    worker processes.  Pool *infrastructure* failures (restricted
+    sandboxes: fork/pipe/import errors, broken pools) fall back to serial
+    execution; a point that raises inside a worker propagates its own
+    exception either way.  With ``cache_dir`` set, each point's row is
+    cached on disk under its content key.  Pass a dict as ``stats`` to
+    receive {"cached": n, "computed": m}.
+    """
+    points = list(points)
+    rows: list[dict | None] = [None] * len(points)
+
+    pending: list[tuple[int, SweepPoint]] = []
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        for i, p in enumerate(points):
+            path = os.path.join(cache_dir, p.key(params) + ".json")
+            if os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        rows[i] = json.load(f)
+                    continue
+                except (OSError, ValueError):
+                    pass
+            pending.append((i, p))
+    else:
+        pending = list(enumerate(points))
+    if stats is not None:
+        stats["cached"] = len(points) - len(pending)
+        stats["computed"] = len(pending)
+
+    if pending:
+        results: list[tuple[int, dict]] | None = None
+        n_jobs = os.cpu_count() if jobs is None else jobs
+        if n_jobs and n_jobs > 1 and len(pending) > 1:
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+            pool = None
+            try:
+                pool = ProcessPoolExecutor(
+                    max_workers=min(n_jobs, len(pending)))
+            except (OSError, ImportError):
+                pool = None        # sandbox without fork/pipe support
+            if pool is not None:
+                try:
+                    with pool:
+                        results = list(pool.map(
+                            _run_point_job,
+                            [(i, p, params) for i, p in pending]))
+                except BrokenProcessPool:
+                    # workers died (OOM kill, hard crash); a point's own
+                    # exception propagates unmodified instead
+                    import sys
+                    print("run_sweep: worker pool died, rerunning "
+                          f"{len(pending)} pending points serially",
+                          file=sys.stderr)
+                    results = None
+        if results is None:
+            results = [(i, run_point(p, params)) for i, p in pending]
+        for i, row in results:
+            rows[i] = row
+            if cache_dir:
+                path = os.path.join(cache_dir,
+                                    points[i].key(params) + ".json")
+                try:
+                    with open(path, "w") as f:
+                        json.dump(row, f)
+                except OSError:
+                    pass
+    return rows  # type: ignore[return-value]

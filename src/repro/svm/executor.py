@@ -16,10 +16,21 @@ Streaming modes map the paper's findings onto serving:
                    compute (paper §4.1 pinning + §4.2 parallel eviction).
   * zero_copy    — leave designated cold leaves host-resident at remote-
                    access cost (paper §4.2).
+
+Device-pool invalidation is push-based: the executor registers an eviction
+listener on the `SVMManager`, and evicted rids map back to their leaf via
+the plan's rid→leaf reverse index.  Each fetch therefore does O(ranges of
+the fetched leaf + leaves actually evicted since the last drain) work —
+the old implementation rescanned every leaf's full range list after every
+fetch, which is O(leaves × ranges) per decode step.  Hidden prefetch
+overlap is tracked in a separate ``overlap_hidden_s`` ledger (subtracted
+in `metrics()`), never by rewinding the manager's wall clock, so recorded
+`Event.t` timestamps stay monotonic.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -63,6 +74,18 @@ class StreamingExecutor:
                         self.mgr.pin(rid)
         # compute-time ledger (simulated clock shares the SVM manager wall)
         self.compute_flops = 0.0
+        # prefetch hidden behind compute: separate ledger, never a wall
+        # rewind (keeps Event.t monotonic)
+        self.overlap_hidden_s = 0.0
+        # push-based pool invalidation (O(1) per eviction, not per fetch)
+        self._pending_evictions: deque[int] = deque()
+        self.mgr.add_evict_listener(self._pending_evictions.append)
+        # double-buffered next-layer prefetch queue
+        self._prefetch_q: deque[tuple[str, float]] = deque()
+        # instrumentation: units of invalidation work done by fetches
+        # (range touches + evicted-leaf drops); regression-tested to be
+        # O(ranges of fetched leaf + actual evictions), not O(all leaves)
+        self.fetch_scan_work = 0
 
     @staticmethod
     def _leaves(tree: PyTree):
@@ -74,36 +97,60 @@ class StreamingExecutor:
     # ----------------------------------------------------------- fetching
 
     def fetch(self, path: str) -> jnp.ndarray:
-        """Touch a leaf's ranges (demand paging) and return the tensor."""
+        """Touch a leaf's ranges (demand paging) and return the tensor.
+
+        Any leaves staged in the prefetch buffer are issued first (their
+        migration cost was overlappable with the *previous* layer's
+        compute window), so this fetch usually hits."""
+        if self._prefetch_q:
+            self.drain_prefetch()
         resident_before = True
         for rid in self.plan.leaf_ranges[path]:
             hit = self.mgr.touch(rid, concurrency=self.concurrency)
             resident_before &= hit
+        self.fetch_scan_work += len(self.plan.leaf_ranges[path])
         if not resident_before or path not in self._device:
-            self._device[path] = jnp.asarray(self._flat[path])
-        self._drop_evicted()
-        return self._device[path]
+            tensor = self._device[path] = jnp.asarray(self._flat[path])
+        else:
+            tensor = self._device[path]
+        # drain after caching: a leaf larger than the pool evicts its own
+        # earlier ranges mid-fetch and must fall straight back out of the
+        # pool (the tensor itself is still returned for this use)
+        self._drain_evictions()
+        return tensor
 
     def prefetch_leaf(self, path: str, overlap_s: float) -> None:
         """Issue next-layer migrations overlapped with current compute
         (paper §4.2 'parallel implementation'): up to `overlap_s` of the
-        migration cost is hidden."""
+        migration cost is hidden (ledgered, not rewound)."""
         w0 = self.mgr.wall
         for rid in self.plan.leaf_ranges[path]:
             self.mgr.touch(rid, concurrency=self.concurrency)
-        hidden = min(self.mgr.wall - w0, overlap_s)
-        self.mgr.wall -= hidden
-        self._drop_evicted()
+        self.overlap_hidden_s += min(self.mgr.wall - w0, overlap_s)
+        self._drain_evictions()
 
-    def _drop_evicted(self) -> None:
-        # leaves with any non-resident, non-zero-copy range fall out of pool
-        for path, rids in self.plan.leaf_ranges.items():
-            if path in self._device:
-                aid = self.plan.space.ranges[rids[0]].alloc_id
-                if aid in self.mgr.zero_copy_allocs:
-                    continue
-                if not all(r in self.mgr.resident for r in rids):
-                    del self._device[path]
+    def queue_prefetch(self, paths: list[str], overlap_s: float) -> None:
+        """Stage the next layer's leaves in the prefetch buffer (double
+        buffering: at most one upcoming layer is staged at a time; the
+        buffer is consumed by the next `fetch`, or an explicit
+        `drain_prefetch`)."""
+        self._prefetch_q.clear()
+        self._prefetch_q.extend((p, overlap_s) for p in paths)
+
+    def drain_prefetch(self) -> None:
+        while self._prefetch_q:
+            path, overlap_s = self._prefetch_q.popleft()
+            self.prefetch_leaf(path, overlap_s)
+
+    def _drain_evictions(self) -> None:
+        """Drop device tensors for leaves whose ranges were evicted since
+        the last drain — pushed by the manager, O(#evictions)."""
+        rid_to_leaf = self.plan.rid_to_leaf
+        while self._pending_evictions:
+            rid = self._pending_evictions.popleft()
+            leaf = rid_to_leaf.get(rid)
+            if leaf is not None and self._device.pop(leaf, None) is not None:
+                self.fetch_scan_work += 1
 
     def charge_compute(self, flops: float) -> None:
         self.compute_flops += flops
@@ -113,6 +160,8 @@ class StreamingExecutor:
 
     def metrics(self) -> dict:
         s = self.mgr.summary()
+        s["wall_s"] = self.mgr.wall - self.overlap_hidden_s
+        s["overlap_hidden_s"] = self.overlap_hidden_s
         s["dos"] = self.plan.dos()
         s["compute_flops"] = self.compute_flops
         return s
@@ -136,8 +185,10 @@ def run_layer_stream(
             tensors = {p: executor.fetch(p) for p in layer_paths[i]}
             flops = apply_layer(i, tensors)
             if executor.prefetch and i + 1 < n:
-                est = flops / PEAK_FLOPS
-                for p in layer_paths[i + 1]:
-                    executor.prefetch_leaf(p, est)
+                # stage layer i+1 in the double buffer; its migrations are
+                # issued (with layer i's compute window as the overlap
+                # budget) when layer i+1's first fetch drains the buffer
+                executor.queue_prefetch(layer_paths[i + 1],
+                                        flops / PEAK_FLOPS)
             executor.charge_compute(flops)
     return executor.metrics()

@@ -59,12 +59,11 @@ def simulate_offload(plan: OffloadPlan, *,
     # ---- forward: produce activations in order
     for i in range(plan.n_layers):
         if plan.order == "reverse":
-            # SVM-aware: eagerly spill the OLDEST resident activation when
-            # the pool fills, overlapped with forward compute (§4.2)
+            # SVM-aware: eagerly spill the policy's victim (oldest under
+            # LRF/FIFO) when the pool fills, 85 % overlapped with forward
+            # compute (§4.2 parallel eviction, via the public spill API)
             while mgr.free < plan.act_bytes and len(mgr.policy) > 0:
-                victim = min(r for r in mgr.resident - mgr.pinned)
-                w = mgr._evict(victim, charge=None)
-                mgr.wall += w * 0.15
+                mgr.spill_oldest(overlap=0.85)
         mgr.touch(rids[i], concurrency=8)     # write-allocate the activation
         mgr.advance(compute_per_layer_s)
 

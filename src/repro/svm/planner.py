@@ -31,6 +31,13 @@ class ParamRanges:
     leaf_ranges: dict[str, list[int]]      # leaf path -> range ids
     leaf_bytes: dict[str, int]
     hbm_budget: int
+    rid_to_leaf: dict[int, str] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.rid_to_leaf:
+            self.rid_to_leaf = {rid: path
+                                for path, rids in self.leaf_ranges.items()
+                                for rid in rids}
 
     @property
     def total_bytes(self) -> int:

@@ -1,6 +1,7 @@
 """Range construction (paper §2.1, Fig. 2)."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

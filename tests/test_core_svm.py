@@ -1,6 +1,7 @@
 """SVM manager state machine: migration, eviction, policies, cost model."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

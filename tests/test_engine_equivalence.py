@@ -1,0 +1,177 @@
+"""Golden equivalence: the compiled-trace engine vs the scalar op loop.
+
+The engine's contract is *byte-identical* `summary()` output — every float
+(wall, cost terms, fault densities) compared with ``==``, no tolerances —
+for every Table-2 workload at DOS 78/109/147 under all four eviction
+policies, plus the §4.2 driver variants and the op-for-op manager end
+state (residency, free bytes, queue order, profile events)."""
+
+import pytest
+
+from repro.core import GB, MB, SweepPoint, run_point, run_sweep, simulate
+from repro.core.engine import compile_trace, compile_workload, execute_compiled
+from repro.core.ranges import AddressSpace
+from repro.core.svm import SVMManager
+from repro.core.simulator import apply_trace
+from repro.core.traces import WORKLOADS, Jacobi2d, Sgemm, make_workload
+
+CAP = 4 * GB
+DOS_POINTS = (78, 109, 147)
+POLICIES = ("lrf", "lru", "clock", "random")
+
+
+def _pair(workload, policy="lrf", profile=False, cap=CAP, **kw):
+    scalar = simulate(workload(), cap, policy=policy, profile=profile,
+                      engine="scalar", **kw)
+    batched = simulate(workload(), cap, policy=policy, profile=profile,
+                       engine="batched", **kw)
+    return scalar, batched
+
+
+def _assert_equiv(scalar, batched, profile=False):
+    assert scalar.summary == batched.summary
+    ms, mb = scalar.manager, batched.manager
+    assert ms.resident == mb.resident
+    assert ms.free == mb.free
+    assert ms.pinned == mb.pinned
+    qs = getattr(ms.policy, "_q", getattr(ms.policy, "_order", None))
+    qb = getattr(mb.policy, "_q", getattr(mb.policy, "_order", None))
+    if qs is not None:
+        assert list(qs) == list(qb)          # victim order
+    if profile:
+        assert ms.events == mb.events
+        assert ms.density == mb.density
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_golden_summary_identical(name, policy):
+    for dos in DOS_POINTS:
+        scalar, batched = _pair(
+            lambda: make_workload(name, int(CAP * dos / 100)), policy)
+        _assert_equiv(scalar, batched)
+
+
+@pytest.mark.parametrize("name", ("stream", "jacobi2d", "sgemm", "gesummv"))
+def test_golden_profile_events_identical(name):
+    scalar, batched = _pair(
+        lambda: make_workload(name, int(CAP * 1.09)), profile=True)
+    _assert_equiv(scalar, batched, profile=True)
+    # LRF queue timestamps are patched to the exact scalar walls
+    assert list(scalar.manager.policy._q.items()) == \
+        list(batched.manager.policy._q.items())
+
+
+@pytest.mark.parametrize("cls,aware", [(Jacobi2d, False), (Jacobi2d, True),
+                                       (Sgemm, False), (Sgemm, True)])
+def test_golden_svm_aware_variants(cls, aware):
+    """pin ops (sgemm) and reverse traversal (jacobi2d) stay equivalent."""
+    scalar, batched = _pair(lambda: cls(int(CAP * 1.25), svm_aware=aware))
+    _assert_equiv(scalar, batched)
+
+
+@pytest.mark.parametrize("kw", [
+    {"parallel_evict": True},
+    {"zero_copy_alloc_names": ("b",)},
+    {"defer_granule": 2 * MB, "defer_k": 3},       # scalar-fallback path
+    {"previct_watermark": 0.1},                    # scalar-fallback path
+])
+def test_golden_driver_variants(kw):
+    scalar, batched = _pair(
+        lambda: make_workload("stream", int(CAP * 1.25)), **kw)
+    _assert_equiv(scalar, batched)
+
+
+def test_golden_fine_grained_ranges():
+    """Many-range spaces (the engine microbenchmark shape) stay exact."""
+    for name, dos in (("stream", 147), ("gesummv", 125)):
+        space_a = AddressSpace(CAP, base=175 * MB, alignment=4 * MB)
+        space_b = AddressSpace(CAP, base=175 * MB, alignment=4 * MB)
+        wa = make_workload(name, int(CAP * dos / 100))
+        wb = make_workload(name, int(CAP * dos / 100))
+        wa.build(space_a)
+        wb.build(space_b)
+        ma = SVMManager(space_a, profile=True)
+        apply_trace(ma, wa.trace(space_a))
+        mb = SVMManager(space_b, profile=True)
+        execute_compiled(compile_workload(wb, space_b), mb)
+        assert ma.summary() == mb.summary()
+        assert ma.events == mb.events
+        assert ma.resident == mb.resident and ma.free == mb.free
+
+
+@pytest.mark.parametrize("policy", ("lrf", "lru"))
+def test_device_full_error_leaves_scalar_consistent_state(policy):
+    """A mid-span 'device full of pinned ranges' error must surface with
+    the same partial manager state as the scalar path."""
+    def build():
+        space = AddressSpace(8 * MB, base=0, alignment=2 * MB)
+        a = space.alloc(4 * MB, "a")
+        b = space.alloc(4 * MB, "b")
+        space.alloc(6 * MB, "c")
+        mgr = SVMManager(space, policy=policy, profile=False)
+        for alloc in (a, b):
+            for r in space.ranges_of(alloc):
+                mgr.pin(r.rid)
+        hits = [("touch", 0, 8, 0)] * 60        # span above FAST_SPAN_MIN
+        fatal_rid = space.ranges_of(2)[0].rid
+        return space, mgr, hits + [("touch", fatal_rid, 8, 0)]
+
+    space_s, mgr_s, ops = build()
+    with pytest.raises(RuntimeError, match="device full"):
+        apply_trace(mgr_s, iter(ops))
+    space_e, mgr_e, ops = build()
+    with pytest.raises(RuntimeError, match="device full"):
+        execute_compiled(compile_trace(iter(ops)), mgr_e)
+    assert mgr_s.free == mgr_e.free
+    assert mgr_s.resident == mgr_e.resident
+    assert mgr_s.summary() == mgr_e.summary()
+
+
+def test_golden_max_ops_truncation():
+    scalar, batched = _pair(
+        lambda: make_workload("stream", int(CAP * 1.47)), max_ops=17)
+    _assert_equiv(scalar, batched)
+
+
+def test_compiled_trace_reexecutes_identically():
+    """One lowering, many executions (the sweep amortisation contract)."""
+    space = AddressSpace(CAP, base=175 * MB)
+    wl = make_workload("jacobi2d", int(CAP * 1.25))
+    wl.build(space)
+    ct = compile_trace(wl.trace(space))
+    runs = []
+    for _ in range(2):
+        mgr = SVMManager(space, profile=False)
+        execute_compiled(ct, mgr)
+        runs.append(mgr.summary())
+    assert runs[0] == runs[1]
+
+
+def test_sweep_runner_matches_serial_and_caches(tmp_path):
+    points = [SweepPoint(workload="stream",
+                         total_bytes=int(CAP * d / 100), capacity=CAP)
+              for d in (78, 125)]
+    serial = [run_point(p) for p in points]
+    cached1 = run_sweep(points, jobs=0, cache_dir=str(tmp_path))
+    cached2 = run_sweep(points, jobs=0, cache_dir=str(tmp_path))
+    assert serial == cached1 == cached2
+    assert len(list(tmp_path.glob("*.json"))) == len(points)
+
+
+def test_dos_sweep_spec_matches_callable():
+    from repro.core import dos_sweep
+    from repro.core.traces import Jacobi2d as J
+    grid = (78, 109)
+    by_callable = dos_sweep(lambda b: J(b, svm_aware=True), grid, CAP)
+    by_spec = dos_sweep(("jacobi2d", {"svm_aware": True}), grid, CAP)
+    assert by_callable == by_spec
+
+
+def test_sweep_point_zero_copy_biggest_resolves():
+    row = run_point(SweepPoint(workload="gesummv",
+                               total_bytes=int(CAP * 1.25), capacity=CAP,
+                               zero_copy="biggest"))
+    direct = simulate(make_workload("gesummv", int(CAP * 1.25)), CAP,
+                      profile=False, zero_copy_alloc_names=("A",)).row()
+    assert row == direct

@@ -1,0 +1,171 @@
+"""Streaming-executor fetch path: push-based eviction (O(1) in leaf count),
+the hidden-overlap ledger (monotonic event clocks), and the public
+previct/spill API."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GB, MB, AddressSpace, SVMManager
+from repro.svm import StreamingExecutor
+from repro.svm.executor import run_layer_stream
+
+
+def _params(n_layers, d=64):
+    key = jax.random.PRNGKey(0)
+    return {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (d, d),
+                                       jnp.float32)
+            for i in range(n_layers)}
+
+
+def _mk(n_layers, budget_frac, **kw):
+    params = _params(n_layers)
+    total = n_layers * 64 * 64 * 4
+    return StreamingExecutor(params, int(total * budget_frac), **kw)
+
+
+# ------------------------------------------------- O(1) fetch scan work
+
+def test_fetch_work_independent_of_leaf_count():
+    """A warm fetch costs exactly the fetched leaf's range count — not a
+    rescan over every leaf in the model."""
+    deltas = {}
+    for n_layers in (8, 32):
+        ex = _mk(n_layers, budget_frac=2.0)
+        for p in ex.plan.leaf_ranges:
+            ex.fetch(p)                       # warm: everything resident
+        w0 = ex.fetch_scan_work
+        ex.fetch("l3")
+        deltas[n_layers] = ex.fetch_scan_work - w0
+        assert deltas[n_layers] == len(ex.plan.leaf_ranges["l3"])
+    assert deltas[8] == deltas[32]
+
+
+def test_fetch_work_bounded_by_ranges_plus_evictions():
+    """Under thrash, total invalidation work is range touches plus leaves
+    actually dropped — bounded by evictions, not fetches × leaves."""
+    n_layers, steps = 16, 4
+    ex = _mk(n_layers, budget_frac=0.5)
+    paths = list(ex.plan.leaf_ranges)
+    n_fetches = 0
+    for _ in range(steps):
+        for p in paths:
+            ex.fetch(p)
+            n_fetches += 1
+    ranges_touched = sum(len(ex.plan.leaf_ranges[p]) for p in paths) * steps
+    drops = ex.fetch_scan_work - ranges_touched
+    assert ex.mgr.n_evictions > 0
+    assert 0 < drops <= ex.mgr.n_evictions
+    # the old implementation's cost shape, for contrast:
+    assert ex.fetch_scan_work < n_fetches * sum(
+        len(r) for r in ex.plan.leaf_ranges.values())
+
+
+def test_device_pool_invariant_under_eviction():
+    """Push-based invalidation keeps the pool exact: a tensor is cached
+    iff all its ranges are resident (brute-force cross-check)."""
+    ex = _mk(12, budget_frac=0.6)
+    paths = list(ex.plan.leaf_ranges)
+    for _ in range(3):
+        for p in paths:
+            ex.fetch(p)
+            for cached, rids in ex.plan.leaf_ranges.items():
+                if cached in ex._device:
+                    assert all(r in ex.mgr.resident for r in rids)
+
+
+def test_leaf_larger_than_pool_self_evicts_but_returns_tensor():
+    """A multi-range leaf that cannot fully fit evicts its own earlier
+    ranges mid-fetch: the tensor is still returned (math must proceed)
+    but it must not stay cached while partially non-resident."""
+    key = jax.random.PRNGKey(1)
+    params = {"big": jax.random.normal(key, (1254, 1254), jnp.float32)}
+    ex = StreamingExecutor(params, 4 * MB)
+    assert len(ex.plan.leaf_ranges["big"]) >= 2
+    t = ex.fetch("big")
+    assert t.shape == (1254, 1254)
+    assert ex.mgr.n_evictions > 0
+    rids = ex.plan.leaf_ranges["big"]
+    if not all(r in ex.mgr.resident for r in rids):
+        assert "big" not in ex._device
+
+
+def test_eviction_listener_and_epoch():
+    fired = []
+    ex = _mk(12, budget_frac=0.5)
+    ex.mgr.add_evict_listener(fired.append)
+    for p in list(ex.plan.leaf_ranges):
+        ex.fetch(p)
+    assert ex.mgr.n_evictions > 0
+    assert len(fired) == ex.mgr.n_evictions == ex.mgr.eviction_epoch
+    assert all(isinstance(r, int) for r in fired)
+
+
+# ------------------------------------------- hidden-overlap ledger (§4.2)
+
+def _stream(n_layers=8, budget_frac=0.6, steps=4, prefetch=False):
+    ex = _mk(n_layers, budget_frac, prefetch=prefetch)
+    paths = [[p] for p in ex.plan.leaf_ranges]
+
+    def apply_layer(i, tensors):
+        return 2.0 * 64 * 64
+
+    m = run_layer_stream(ex, paths, apply_layer, steps=steps)
+    return ex, m
+
+
+def test_prefetch_keeps_event_clock_monotonic():
+    """Hidden overlap is ledgered, never a wall rewind: recorded event
+    timestamps are non-decreasing even with prefetch on."""
+    ex, m = _stream(prefetch=True)
+    ts = [e.t for e in ex.mgr.events]
+    assert ts == sorted(ts)
+    assert ex.overlap_hidden_s > 0.0
+    assert m["wall_s"] == ex.mgr.wall - ex.overlap_hidden_s
+    assert m["overlap_hidden_s"] == ex.overlap_hidden_s
+
+
+def test_prefetch_still_reduces_reported_wall():
+    _, base = _stream(prefetch=False)
+    _, pre = _stream(prefetch=True)
+    assert pre["migrations"] == base["migrations"]
+    assert pre["wall_s"] < base["wall_s"]
+
+
+# --------------------------------------------------- previct / spill API
+
+def _space(n=8, rng_mb=2):
+    s = AddressSpace(n * rng_mb * MB // 2, base=0, alignment=rng_mb * MB)
+    for i in range(n):
+        s.alloc(rng_mb * MB, f"a{i}")
+    return s
+
+
+def test_previct_public_api():
+    space = _space()
+    mgr = SVMManager(space, profile=True)
+    mgr.touch(0, concurrency=1)
+    mgr.touch(1, concurrency=1)
+    w0 = mgr.wall
+    cost = mgr.previct(0, overlap=0.5)
+    assert cost > 0.0
+    assert 0 not in mgr.resident
+    assert mgr.n_evictions == 1
+    # half the eviction cost hidden off the critical path
+    assert mgr.wall == pytest.approx(w0 + 0.5 * cost)
+    # non-resident and pinned ranges are not evictable
+    assert mgr.previct(0) == 0.0
+    mgr.pin(1)
+    assert mgr.previct(1) == 0.0
+    assert 1 in mgr.resident
+
+
+def test_spill_oldest_follows_policy_order():
+    space = _space()
+    mgr = SVMManager(space)
+    for rid in (2, 0, 1):
+        mgr.touch(rid, concurrency=1)
+    assert mgr.spill_oldest() == 2        # LRF: first-faulted first
+    assert mgr.spill_oldest() == 0
+    assert mgr.spill_oldest() == 1
+    assert mgr.spill_oldest() is None     # nothing evictable left

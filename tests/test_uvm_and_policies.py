@@ -1,6 +1,7 @@
 """UVM-mode baseline manager + cross-policy behaviour (Table 1 machinery)."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
