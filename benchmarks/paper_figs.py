@@ -53,16 +53,19 @@ _GRID_MEMO: dict = {}
 
 
 def _grid_sweep(names, grid=DOS_GRID, *, wl_kwargs=(), mgr_kwargs=(),
-                policy="lrf", zero_copy=(), normalize_at=78.0, stats=None):
+                policy="lrf", zero_copy=(), manager="svm",
+                normalize_at=78.0, stats=None):
     """Run a (workload × DOS) grid through the parallel sweep runner and
     return {workload: [row, ...]} with per-workload ``norm_perf``.
 
     Results are memoised in-process so figures sharing a grid (fig6/fig10)
-    compute it once even with the disk cache disabled."""
+    compute it once even with the disk cache disabled.  Per-workload
+    anchor points (when ``normalize_at`` is not in the grid) ride in the
+    same `run_sweep` batch as the main rows."""
     memo_key = (tuple(sorted(names)), tuple(grid),
                 tuple(sorted(dict(wl_kwargs).items())),
                 tuple(sorted(dict(mgr_kwargs).items())),
-                policy, zero_copy, normalize_at)
+                policy, zero_copy, manager, normalize_at)
     if memo_key in _GRID_MEMO:
         if stats is not None:
             stats.update(cached=len(names) * len(grid), computed=0)
@@ -72,18 +75,21 @@ def _grid_sweep(names, grid=DOS_GRID, *, wl_kwargs=(), mgr_kwargs=(),
         return SweepPoint.make(n, CAP * d / 100.0, CAP, policy=policy,
                                wl_kwargs=dict(wl_kwargs),
                                mgr_kwargs=dict(mgr_kwargs),
-                               zero_copy=zero_copy)
+                               zero_copy=zero_copy, manager=manager)
 
+    need_anchor = not any(abs(d - normalize_at) < 1e-9 for d in grid)
     points = [point(n, d) for n in names for d in grid]
+    if need_anchor:
+        points += [point(n, normalize_at) for n in names]
     rows = run_sweep(points, jobs=JOBS, cache_dir=CACHE_DIR, stats=stats)
     out = {}
     for i, n in enumerate(names):
         sub = rows[i * len(grid):(i + 1) * len(grid)]
-        base = next((r["throughput"] for d, r in zip(grid, sub)
-                     if abs(d - normalize_at) < 1e-9), None)
-        if base is None:   # anchor not in the grid: run it as an extra point
-            from repro.core import run_point
-            base = run_point(point(n, normalize_at))["throughput"]
+        if need_anchor:
+            base = rows[len(names) * len(grid) + i]["throughput"]
+        else:
+            base = next(r["throughput"] for d, r in zip(grid, sub)
+                        if abs(d - normalize_at) < 1e-9)
         for r in sub:
             r["norm_perf"] = r["throughput"] / base
         out[n] = sub
@@ -154,6 +160,78 @@ def fig6_dos():
         derived = f"perf109={curve[109]:.3f}_perf156={curve[156]:.3f}"
         rows.append((f"fig6_dos_{name}", 0.0, derived))
     _art("fig6_dos_sweep", art)
+    return rows
+
+
+# ------------------------------------------------- figure 6 — variant axes
+
+# §4.2 mitigation / design-point axes swept across the full DOS grid —
+# every point executes on the batched tier (defer / previct / zero-copy /
+# UVM all have fast-path interpreters since PR 2)
+FIG6_VARIANTS = {
+    "baseline": {},
+    "defer": {"mgr_kwargs": {"defer_granule": 2 * MB, "defer_k": 3}},
+    "previct": {"mgr_kwargs": {"previct_watermark": 0.1}},
+    "zero_copy": {"zero_copy": "biggest"},
+    "uvm": {"manager": "uvm"},
+}
+
+
+def fig6_variants():
+    """Fig. 6 DOS sweep under each §4.2 driver variant and the UVM design
+    point (Table 1), one (workload × DOS × variant) grid."""
+    names = ("stream", "jacobi2d", "sgemm", "gesummv")
+    art = {}
+    rows = []
+    total_stats = {"computed": 0, "cached": 0}
+
+    def tally(stats):
+        total_stats["computed"] += stats.get("computed", 0)
+        total_stats["cached"] += stats.get("cached", 0)
+
+    def work():
+        out = {}
+        for label, kw in FIG6_VARIANTS.items():
+            wl_kw = dict(kw.get("wl_kwargs", ()))
+            if kw.get("manager") == "uvm":
+                # manager-agnostic trace for the wave workloads (Table 1);
+                # run_sweep resets the stats dict per call, so tally each
+                sweeps = {}
+                for n in names:
+                    stats = {}
+                    sweeps[n] = _grid_sweep(
+                        (n,), wl_kwargs=(wl_kw | {"retry_override": 1}
+                                         if n in ("mvt", "gesummv")
+                                         else wl_kw),
+                        manager="uvm", stats=stats)[n]
+                    tally(stats)
+            else:
+                stats = {}
+                sweeps = _grid_sweep(
+                    names, wl_kwargs=wl_kw,
+                    mgr_kwargs=kw.get("mgr_kwargs", {}),
+                    zero_copy=kw.get("zero_copy", ()), stats=stats)
+                tally(stats)
+            out[label] = sweeps
+        return out
+
+    sweeps, us = _timed(work)
+    rows.append(("fig6_variants_grid", us,
+                 f"computed={total_stats['computed']}"
+                 f"_cached={total_stats['cached']}_jobs={JOBS}"))
+    for name in names:
+        art[name] = {
+            label: {round(r["dos"]): round(r["norm_perf"], 4)
+                    for r in sweeps[label][name]}
+            for label in FIG6_VARIANTS
+        }
+        base109 = art[name]["baseline"][109]
+        best = max(((lb, art[name][lb][109]) for lb in FIG6_VARIANTS
+                    if lb != "baseline"), key=lambda kv: kv[1])
+        rows.append((f"fig6_variants_{name}", 0.0,
+                     f"base109={base109:.3f}_best109={best[0]}"
+                     f"@{best[1]:.3f}"))
+    _art("fig6_dos_variants", art)
     return rows
 
 
@@ -239,19 +317,29 @@ def fig11_13_svm_aware():
     # viable to DOS ~ 300 while naive collapses (orders of magnitude)
     grid = DOS_GRID + [220, 280]
     labels = ("jacobi2d", "sgemm")
-    # two batched grid calls (not one per label×variant): all points of a
-    # variant are in flight together
-    (naives, awares), us = _timed(lambda: (
+    # batched grid calls (not one per label×variant×point): all points of
+    # a variant are in flight together.  Besides the paper's app-rewrite
+    # comparison, sweep the naive kernels under the §4.2 driver
+    # mitigations — does a driver-side fix approach the rewrite?
+    (naives, awares, defers, previcts), us = _timed(lambda: (
         _grid_sweep(labels, grid),
-        _grid_sweep(labels, grid, wl_kwargs={"svm_aware": True})))
-    rows.append(("fig11_13_grid", us, f"points={4 * len(grid)}_jobs={JOBS}"))
+        _grid_sweep(labels, grid, wl_kwargs={"svm_aware": True}),
+        _grid_sweep(labels, grid,
+                    mgr_kwargs={"defer_granule": 2 * MB, "defer_k": 3}),
+        _grid_sweep(labels, grid, mgr_kwargs={"previct_watermark": 0.1})))
+    rows.append(("fig11_13_grid", us, f"points={8 * len(grid)}_jobs={JOBS}"))
     for label in labels:
         nv = {round(r["dos"]): r["norm_perf"] for r in naives[label]}
         aw = {round(r["dos"]): r["norm_perf"] for r in awares[label]}
-        art[label] = {"naive": nv, "aware": aw}
+        df = {round(r["dos"]): r["norm_perf"] for r in defers[label]}
+        pv = {round(r["dos"]): r["norm_perf"] for r in previcts[label]}
+        art[label] = {"naive": nv, "aware": aw, "naive_defer": df,
+                      "naive_previct": pv}
+        best_mit = max(df[156], pv[156])
         derived = (f"speedup109={aw[109]/max(nv[109],1e-9):.2f}x"
                    f"_speedup156={aw[156]/max(nv[156],1e-9):.2f}x"
-                   f"_speedup280={aw[280]/max(nv[280],1e-9):.0f}x")
+                   f"_speedup280={aw[280]/max(nv[280],1e-9):.0f}x"
+                   f"_bestmit156={best_mit:.3f}")
         rows.append((f"fig11_13_svm_aware_{label}", 0.0, derived))
     _art("fig11_13_svm_aware", art)
     return rows
@@ -333,6 +421,6 @@ def beyond_driver():
     return rows
 
 
-ALL = (fig2_ranges, fig5_cost, fig6_dos, fig7_profiles, fig8_9_density,
-       fig10_thrashing, fig11_13_svm_aware, table1_svm_vs_uvm,
-       beyond_driver)
+ALL = (fig2_ranges, fig5_cost, fig6_dos, fig6_variants, fig7_profiles,
+       fig8_9_density, fig10_thrashing, fig11_13_svm_aware,
+       table1_svm_vs_uvm, beyond_driver)

@@ -1,4 +1,4 @@
-"""Compiled-trace engine — the fast execution tier for the SVM simulator.
+"""Compiled-trace engine — the fast execution tier for the simulators.
 
 `apply_trace` walks a workload trace one op at a time through
 `SVMManager.touch`, paying full Python dispatch (dataclass construction,
@@ -20,10 +20,18 @@ them with a batched interpreter:
     accumulation order is preserved bit-for-bit via ``np.cumsum`` (an exact
     left-to-right fold) seeded with the manager's current accumulator
     values, so `summary()` is **byte-identical** to the scalar path.
-  * Boundary ops (writeback / pin / unpin / zero-copy touches) and
-    unsupported driver variants (deferred granularity, pre-eviction
-    watermark, non-SVM managers) drop to the scalar `SVMManager` path,
-    op for op.
+  * Every §4.2 driver variant runs on the fast tier: deferred granularity
+    (``defer_granule``/``defer_k``, per-range fault counters and
+    granule-sized non-resident migrations), background pre-eviction
+    (``previct_watermark``/``previct_overlap``, folded into the wall
+    trajectory and cost ledger at the exact scalar add positions), and
+    zero-copy allocations (remote-access costs vectorised in-span instead
+    of breaking spans at every zero-copy touch).
+  * `UVMManager` runs on its own batched interpreter
+    (`repro.core.engine_uvm`): the same `execute_compiled` entry point
+    dispatches on manager type.  Unknown manager types replay op-for-op.
+  * Boundary ops (writeback / pin / unpin) drop to the scalar manager
+    path, op for op.
 
 Equivalence guarantee: for any trace and any manager configuration,
 executing the compiled trace leaves the manager with the same `summary()`,
@@ -47,12 +55,18 @@ from typing import Iterable
 
 import numpy as np
 
-from repro.core.costmodel import CostParams, eviction_cost, migration_cost
+from repro.core.costmodel import (
+    CostParams,
+    eviction_cost,
+    migration_cost,
+    zerocopy_cost,
+)
 from repro.core.policies import LRF, LRU
 from repro.core.ranges import PAGE, AddressSpace
 from repro.core.svm import DensitySample, Event, SVMManager
+from repro.core.uvm import UVMManager
 
-ENGINE_VERSION = "1"
+ENGINE_VERSION = "2"
 
 OP_TOUCH = 0
 OP_COMPUTE = 1
@@ -63,6 +77,8 @@ OP_UNPIN = 4
 # spans shorter than this run through the scalar manager path: the NumPy
 # batch setup would cost more than it saves
 FAST_SPAN_MIN = 48
+
+_EMPTY_I = np.zeros(0, dtype=np.int64)
 
 
 @dataclasses.dataclass
@@ -88,19 +104,39 @@ class CompiledTrace:
     def __len__(self) -> int:
         return len(self.codes)
 
-    def span(self, s: int, e: int):
+    def span(self, s: int, e: int, zc_mask=None, zc_key=None):
         """Touch-stream slice for ops [s, e): (pos_list, rid_list, pos_np,
-        rid_np, rids_unique). Cached — compiled traces are executed many
+        rid_np, rids_unique, zc_pos_np, zc_rid_np).  Touches on zero-copy
+        ranges (``zc_mask`` indexed by rid; ``zc_key`` identifies the
+        zero-copy configuration for caching) are split out of the
+        policy-visible stream.  Cached — compiled traces are executed many
         times (policy/variant axes of a sweep)."""
-        cached = self.span_cache.get((s, e))
+        key = (s, e, zc_key)
+        cached = self.span_cache.get(key)
         if cached is None:
             lo, hi = np.searchsorted(self.touch_pos_np, (s, e))
             pos_np = self.touch_pos_np[lo:hi]
             rid_np = self.touch_rid_np[lo:hi]
-            rid_l = self.touch_rid[lo:hi]
+            zc_pos = zc_rid = _EMPTY_I
+            if zc_mask is not None and len(rid_np):
+                zsel = zc_mask[rid_np]
+                if zsel.any():
+                    zc_pos = pos_np[zsel]
+                    zc_rid = rid_np[zsel]
+                    keep = ~zsel
+                    pos_np = pos_np[keep]
+                    rid_np = rid_np[keep]
+                    pos_l = pos_np.tolist()
+                    rid_l = rid_np.tolist()
+                else:
+                    pos_l = self.touch_pos[lo:hi]
+                    rid_l = self.touch_rid[lo:hi]
+            else:
+                pos_l = self.touch_pos[lo:hi]
+                rid_l = self.touch_rid[lo:hi]
             uniq = len(np.unique(rid_np)) == len(rid_np)
-            cached = (self.touch_pos[lo:hi], rid_l, pos_np, rid_np, uniq)
-            self.span_cache[(s, e)] = cached
+            cached = (pos_l, rid_l, pos_np, rid_np, uniq, zc_pos, zc_rid)
+            self.span_cache[key] = cached
         return cached
 
 
@@ -215,57 +251,91 @@ def _tables(space: AddressSpace, params: CostParams) -> dict:
             "ecs": np.array([eviction_cost(int(s), params)
                              for s in usz.tolist()]),
             "sizeidx": np.searchsorted(usz, tab["size_arr"]),
+            "xcost": {},    # off-table sizes (deferred granules): 5 terms
+            "zcc": {},      # zero-copy touch cost per range size
         }
         tab["params"][params] = per_params
     return {**tab, **per_params}
 
 
+def _terms_for_sizes(tab: dict, m_nb: np.ndarray,
+                     params: CostParams) -> np.ndarray:
+    """(len(m_nb), 5) cost terms for arbitrary per-miss byte counts —
+    deferred-granularity migrations are granule-sized, off the range-size
+    table.  Memoised per unique size, bit-identical to the scalar path's
+    fresh `migration_cost` calls."""
+    xc = tab["xcost"]
+    usz2, inv = np.unique(m_nb, return_inverse=True)
+    tarr = np.empty((len(usz2), 5))
+    for j, sz in enumerate(usz2.tolist()):
+        t = xc.get(sz)
+        if t is None:
+            m = migration_cost(sz, params)
+            t = (m.cpu_unmap, m.sdma_setup, m.alloc, m.cpu_update, m.misc)
+            xc[sz] = t
+        tarr[j] = t
+    return tarr[inv]
+
+
+def _zc_costs(tab: dict, zc_sizes: np.ndarray,
+              params: CostParams) -> np.ndarray:
+    zcc = tab["zcc"]
+    usz, inv = np.unique(zc_sizes, return_inverse=True)
+    carr = np.empty(len(usz))
+    for j, sz in enumerate(usz.tolist()):
+        c = zcc.get(sz)
+        if c is None:
+            c = zerocopy_cost(sz, params)
+            zcc[sz] = c
+        carr[j] = c
+    return carr[inv]
+
+
 # ----------------------------------------------------------------- execution
 
-def _fast_supported(mgr) -> bool:
-    if type(mgr) is not SVMManager:
-        return False
-    if mgr.defer_granule and mgr.defer_k > 0:
-        return False
-    if mgr.previct_watermark > 0.0:
-        return False
-    return True
-
-
 def execute_compiled(ct: CompiledTrace, mgr) -> None:
-    """Apply a compiled trace to a manager; equivalent to `apply_trace`."""
-    if not _fast_supported(mgr):
-        _replay(ct, mgr, 0, len(ct))
-        return
+    """Apply a compiled trace to a manager; equivalent to `apply_trace`.
 
-    # dynamic boundaries: touches on zero-copy allocations take the scalar
-    # path (they charge remote-access cost instead of migrating)
-    bounds = ct.boundaries
+    Dispatches on the manager type: `SVMManager` and `UVMManager` execute
+    on their batched interpreters; any other manager replays op-for-op
+    through its own `touch`/`advance`/... methods."""
+    if type(mgr) is SVMManager:
+        _execute_svm(ct, mgr)
+    elif type(mgr) is UVMManager:
+        from repro.core.engine_uvm import execute_compiled_uvm
+        execute_compiled_uvm(ct, mgr)
+    else:
+        _replay(ct, mgr, 0, len(ct))
+
+
+def _execute_svm(ct: CompiledTrace, mgr: SVMManager) -> None:
+    zc_mask = zc_key = None
     if mgr.zero_copy_allocs:
-        zc_rids = {r.rid for r in mgr.space.ranges
-                   if r.alloc_id in mgr.zero_copy_allocs}
-        if zc_rids:
-            zc_mask = np.zeros(len(mgr.space.ranges), dtype=bool)
-            zc_mask[list(zc_rids)] = True
-            touch_zc = (ct.codes == OP_TOUCH) & zc_mask[np.clip(ct.rids, 0,
-                                                                None)]
-            bounds = np.union1d(bounds, np.nonzero(touch_zc)[0])
+        key = frozenset(mgr.zero_copy_allocs)
+        tab = _SPACE_TABLES.get(mgr.space)
+        masks = tab.setdefault("zc_masks", {}) if tab is not None else {}
+        zc_mask = masks.get(key)
+        if zc_mask is None:
+            aid_arr = np.array([r.alloc_id for r in mgr.space.ranges])
+            zc_mask = np.isin(aid_arr, list(key))
+            masks[key] = zc_mask
+        if zc_mask.any():
+            zc_key = key
+        else:
+            zc_mask = None
 
     pos = 0
-    for b in bounds.tolist():
-        _run_span(ct, mgr, pos, b)
+    for b in ct.boundaries.tolist():
+        _run_span(ct, mgr, pos, b, zc_mask, zc_key)
         _exec_boundary(ct, mgr, b)
         pos = b + 1
-    _run_span(ct, mgr, pos, len(ct))
+    _run_span(ct, mgr, pos, len(ct), zc_mask, zc_key)
 
 
 def _exec_boundary(ct: CompiledTrace, mgr, k: int) -> None:
     code = ct.codes[k]
     rid = int(ct.rids[k])
-    if code == OP_TOUCH:          # zero-copy touch
-        mgr.touch(rid, concurrency=int(ct.concs[k]),
-                  page_hint=int(ct.hints[k]))
-    elif code == OP_WRITEBACK:
+    if code == OP_WRITEBACK:
         mgr.writeback(rid)
     elif code == OP_PIN:
         mgr.pin(rid)
@@ -288,16 +358,38 @@ def _replay(ct: CompiledTrace, mgr, s: int, e: int) -> None:
             _exec_boundary(ct, mgr, k)
 
 
-def _run_span(ct: CompiledTrace, mgr, s: int, e: int) -> None:
+@dataclasses.dataclass
+class SpanStruct:
+    """Phase-A output for one span: the structural facts Phase B turns
+    into float accounting."""
+
+    m_pos: list | np.ndarray        # op index per miss
+    m_rid: list | np.ndarray        # rid per miss
+    nev: np.ndarray                 # blocking evictions per miss
+    victims: list                   # blocking victims, flattened in order
+    lastpos: dict | None = None     # LRU: rid -> last touch op index
+    # per-miss migrated bytes, None = full range sizes; a NEGATIVE entry
+    # is a deferred granule migration (the range did not become resident)
+    m_nbytes: list | None = None
+    pv_counts: list | None = None   # pre-evictions per miss; None = none
+    pv_victims: list | None = None  # pre-eviction victims, flattened
+
+
+def _run_span(ct: CompiledTrace, mgr, s: int, e: int,
+              zc_mask, zc_key) -> None:
     if e <= s:
         return
     if e - s < FAST_SPAN_MIN:
         _replay(ct, mgr, s, e)
         return
-    tpos, trid, tpos_np, trid_np, uniq = ct.span(s, e)
+    tpos, trid, tpos_np, trid_np, uniq, zc_pos, zc_rid = \
+        ct.span(s, e, zc_mask, zc_key)
     tab = _tables(mgr.space, mgr.params)
+    defer_on = bool(mgr.defer_granule) and mgr.defer_k > 0
+    pw = mgr.previct_watermark
     struct = None
-    if type(mgr.policy) is LRF and not mgr.pinned and len(trid):
+    if (type(mgr.policy) is LRF and not mgr.pinned and len(trid)
+            and not defer_on):
         # vectorised LRF fast paths, gated on a residency bitmap
         mask = np.zeros(tab["n_ranges"], dtype=bool)
         resident = mgr.resident
@@ -307,26 +399,31 @@ def _run_span(ct: CompiledTrace, mgr, s: int, e: int) -> None:
         u, first_idx = np.unique(trid_np, return_index=True)
         miss_u = ~mask[u]
         need = int(tab["size_arr"][u[miss_u]].sum())
-        if need <= mgr.free:
-            # no eviction possible: misses are exactly the first touches
-            # of the non-resident ranges, hits are LRF no-ops
+        if need <= mgr.free and (
+                pw <= 0.0 or need == 0
+                or mgr.free - need >= pw * mgr.capacity):
+            # no eviction possible — and, under a pre-eviction watermark,
+            # free stays above the watermark at every prefix (free only
+            # shrinks, monotonically, to its final value), so no previcts
+            # fire either: misses are exactly the first touches of the
+            # non-resident ranges, hits are LRF no-ops
             struct = _phase_a_lrf_noevict(
                 mgr, tpos_np, trid_np, first_idx[miss_u], need)
-        else:
+        elif pw <= 0.0:
             # eviction-pressure span: solve the FIFO dynamics in closed
             # form under the every-touch-misses hypothesis and validate it
             # vectorised (holds for linear streaming AND full thrash);
             # falls back to the sequential loop on mixed hit/miss spans
             prev = None
             if not uniq:
-                prev = ct.span_cache.get(("prev", s, e))
+                prev = ct.span_cache.get(("prev", s, e, zc_key))
                 if prev is None:
                     order = np.argsort(trid_np, kind="stable")
                     srid = trid_np[order]
                     prev = np.full(len(trid_np), -1, dtype=np.int64)
                     same = srid[1:] == srid[:-1]
                     prev[order[1:][same]] = order[:-1][same]
-                    ct.span_cache[("prev", s, e)] = prev
+                    ct.span_cache[("prev", s, e, zc_key)] = prev
             struct = _phase_a_lrf_streaming(mgr, tpos_np, trid, trid_np,
                                             tab, mask, prev)
     if struct is None:
@@ -335,7 +432,9 @@ def _run_span(ct: CompiledTrace, mgr, s: int, e: int) -> None:
         # path, which raises with fully consistent partial manager state
         snap = _snapshot(mgr)
         try:
-            if type(mgr.policy) is LRF:
+            if defer_on or pw > 0.0:
+                struct = _phase_a_var(mgr, tpos, trid, tab)
+            elif type(mgr.policy) is LRF:
                 struct = _phase_a_lrf(mgr, tpos, trid, tab)
             else:
                 struct = _phase_a_generic(mgr, tpos, trid, tab)
@@ -343,7 +442,7 @@ def _run_span(ct: CompiledTrace, mgr, s: int, e: int) -> None:
             _restore(mgr, snap)
             _replay(ct, mgr, s, e)    # re-raises at the same op, scalar
             raise                     # unreachable: replay must raise too
-    _phase_b(ct, mgr, s, e, tab, *struct)
+    _phase_b(ct, mgr, s, e, tab, struct, zc_pos, zc_rid, zc_key)
 
 
 # ------------------------------------------------------ phase A — structure
@@ -360,14 +459,16 @@ def _snapshot(mgr):
     else:
         import copy
         pstate = ("deep", copy.deepcopy(policy))
-    return set(mgr.resident), mgr.free, pstate
+    return set(mgr.resident), mgr.free, dict(mgr._defer_count), pstate
 
 
 def _restore(mgr, snap):
-    resident, free, pstate = snap
+    resident, free, defer_count, pstate = snap
     mgr.resident.clear()
     mgr.resident.update(resident)
     mgr.free = free
+    mgr._defer_count.clear()
+    mgr._defer_count.update(defer_count)
     policy = mgr.policy
     if pstate[0] == "q":
         policy._q.clear()
@@ -397,7 +498,7 @@ def _phase_a_lrf_noevict(mgr, tpos_np, trid_np, miss_first_idx, need):
     q = mgr.policy._q
     for rid in rid_list:
         q[rid] = 0.0
-    return m_pos, m_rid, np.zeros(len(idx), dtype=np.int64), [], None
+    return SpanStruct(m_pos, m_rid, np.zeros(len(idx), dtype=np.int64), [])
 
 
 def _phase_a_lrf_streaming(mgr, tpos_np, trid, trid_np, tab, mask, prev):
@@ -464,7 +565,7 @@ def _phase_a_lrf_streaming(mgr, tpos_np, trid, trid_np, tab, mask, prev):
     resident = mgr.resident
     resident.clear()
     resident.update(q)
-    return tpos_np, trid_np, nev, victims, None
+    return SpanStruct(tpos_np, trid_np, nev, victims)
 
 
 def _phase_a_lrf(mgr, tpos, trid, tab):
@@ -515,7 +616,7 @@ def _phase_a_lrf(mgr, tpos, trid, tab):
         na(n_victims)
     mgr.free = free
     nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
-    return miss_pos, miss_rid, nev, victims, None
+    return SpanStruct(miss_pos, miss_rid, nev, victims)
 
 
 def _phase_a_generic(mgr, tpos, trid, tab):
@@ -564,13 +665,216 @@ def _phase_a_generic(mgr, tpos, trid, tab):
         vends.append(n_victims)
     mgr.free = free
     nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
-    return miss_pos, miss_rid, nev, victims, (lastpos if track else None)
+    return SpanStruct(miss_pos, miss_rid, nev, victims,
+                      lastpos if track else None)
+
+
+def _phase_a_var(mgr, tpos, trid, tab):
+    """Sequential Phase A for the §4.2 driver variants: deferred
+    granularity (the first ``defer_k - 1`` faults on a range migrate only
+    a granule and leave it non-resident) and background pre-eviction below
+    the free-space watermark (victims drained off the critical path after
+    each migration).  LRF drives its queue directly; other policies go
+    through the scalar call sequence so stateful policies stay in
+    lockstep."""
+    if type(mgr.policy) is LRF:
+        return _phase_a_var_lrf(mgr, tpos, trid, tab)
+    return _phase_a_var_generic(mgr, tpos, trid, tab)
+
+
+def _phase_a_var_lrf(mgr, tpos, trid, tab):
+    q = mgr.policy._q
+    popitem = q.popitem
+    resident = mgr.resident
+    res_add = resident.add
+    res_disc = resident.discard
+    pinned = mgr.pinned
+    sizes = tab["sizes"]
+    free = mgr.free
+    defer_g = mgr.defer_granule or 0
+    defer_k = mgr.defer_k
+    defer_on = bool(defer_g) and defer_k > 0
+    dcount = mgr._defer_count
+    dget = dcount.get
+    pw_on = mgr.previct_watermark > 0.0
+    target = mgr.previct_watermark * mgr.capacity
+    miss_pos: list[int] = []
+    miss_rid: list[int] = []
+    m_nb: list[int] = []
+    vend_pairs: list[tuple[int, int]] = []   # (miss idx, cum victims)
+    victims: list[int] = []
+    pv_counts: list[int] = []
+    pv_victims: list[int] = []
+    mp = miss_pos.append
+    ma = miss_rid.append
+    nba = m_nb.append
+    vp = vend_pairs.append
+    va = victims.append
+    pca = pv_counts.append
+    pva = pv_victims.append
+    n_victims = 0
+    for i, rid in enumerate(trid):
+        if rid in resident:
+            continue
+        nbytes = sizes[rid]
+        full = True
+        if defer_on:
+            c = dget(rid, 0) + 1
+            dcount[rid] = c
+            if c < defer_k:
+                if defer_g < nbytes:
+                    nbytes = defer_g
+                full = False
+            else:
+                dcount.pop(rid, None)
+        v0 = n_victims
+        while free < nbytes:
+            if not q:
+                raise RuntimeError(
+                    "SVM: device full of pinned/unevictable ranges "
+                    f"(free={free}, need more; pinned={len(pinned)})")
+            victim, _ = popitem(False)
+            res_disc(victim)
+            free += sizes[victim]
+            va(victim)
+            n_victims += 1
+        if full:
+            free -= nbytes
+            res_add(rid)
+            if rid not in pinned:
+                q[rid] = 0.0
+            nba(nbytes)
+        else:
+            nba(-nbytes)        # deferred granule: not resident
+        mp(tpos[i])
+        ma(rid)
+        if n_victims != v0:
+            vp((len(miss_pos) - 1, n_victims))
+        if pw_on:
+            pvn = 0
+            while free < target and q:
+                victim, _ = popitem(False)
+                res_disc(victim)
+                free += sizes[victim]
+                pva(victim)
+                pvn += 1
+            pca(pvn)
+    mgr.free = free
+    nev = _nev_from_pairs(vend_pairs, len(miss_pos))
+    return SpanStruct(miss_pos, miss_rid, nev, victims, None,
+                      m_nb if defer_on else None,
+                      pv_counts if pw_on else None,
+                      pv_victims if pw_on else None)
+
+
+def _phase_a_var_generic(mgr, tpos, trid, tab):
+    policy = mgr.policy
+    on_touch = policy.on_touch
+    track = isinstance(policy, LRU)
+    lastpos: dict[int, int] = {}
+    resident = mgr.resident
+    pinned = mgr.pinned
+    sizes = tab["sizes"]
+    free = mgr.free
+    defer_g = mgr.defer_granule or 0
+    defer_k = mgr.defer_k
+    defer_on = bool(defer_g) and defer_k > 0
+    dcount = mgr._defer_count
+    pw_on = mgr.previct_watermark > 0.0
+    target = mgr.previct_watermark * mgr.capacity
+    miss_pos: list[int] = []
+    miss_rid: list[int] = []
+    m_nb: list[int] = []
+    vends: list[int] = []
+    victims: list[int] = []
+    pv_counts: list[int] = []
+    pv_victims: list[int] = []
+    n_victims = 0
+    for i, rid in enumerate(trid):
+        if rid in resident:
+            on_touch(rid, 0.0)
+            if track:
+                lastpos[rid] = tpos[i]
+            continue
+        nbytes = sizes[rid]
+        full = True
+        if defer_on:
+            c = dcount.get(rid, 0) + 1
+            dcount[rid] = c
+            if c < defer_k:
+                if defer_g < nbytes:
+                    nbytes = defer_g
+                full = False
+            else:
+                dcount.pop(rid, None)
+        while free < nbytes:
+            if len(policy) == 0:
+                raise RuntimeError(
+                    "SVM: device full of pinned/unevictable ranges "
+                    f"(free={free}, need more; pinned={len(pinned)})")
+            victim = policy.victim()
+            policy.remove(victim)
+            resident.discard(victim)
+            free += sizes[victim]
+            victims.append(victim)
+            n_victims += 1
+        if full:
+            free -= nbytes
+            resident.add(rid)
+            if rid not in pinned:
+                policy.insert(rid, 0.0)
+                if track:
+                    lastpos[rid] = tpos[i]
+        miss_pos.append(tpos[i])
+        miss_rid.append(rid)
+        m_nb.append(nbytes if full else -nbytes)
+        vends.append(n_victims)
+        if pw_on:
+            pvn = 0
+            while free < target and len(policy) > 0:
+                victim = policy.victim()
+                policy.remove(victim)
+                resident.discard(victim)
+                free += sizes[victim]
+                pv_victims.append(victim)
+                pvn += 1
+            pv_counts.append(pvn)
+    mgr.free = free
+    nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
+    return SpanStruct(miss_pos, miss_rid, nev, victims,
+                      lastpos if track else None,
+                      m_nb if defer_on else None,
+                      pv_counts if pw_on else None,
+                      pv_victims if pw_on else None)
+
+
+def _nev_from_pairs(vend_pairs, n_miss):
+    """Dense per-miss blocking-eviction counts from the sparse
+    (miss index, cumulative victims) pairs recorded in Phase A."""
+    nev = np.zeros(n_miss, dtype=np.int64)
+    if vend_pairs:
+        idxs = [p[0] for p in vend_pairs]
+        cums = np.array([p[1] for p in vend_pairs], dtype=np.int64)
+        nev[idxs] = np.diff(cums, prepend=0)
+    return nev
 
 
 # ----------------------------------------------------- phase B — accounting
 
-def _phase_b(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims, lastpos):
-    """Vectorised, bit-exact float accounting for one span.
+def _phase_b(ct, mgr, s, e, tab, st: SpanStruct, zc_pos, zc_rid,
+             zc_key=None) -> None:
+    if (len(zc_pos) == 0 and st.m_nbytes is None
+            and (st.pv_counts is None or not any(st.pv_counts))):
+        _phase_b_fast(ct, mgr, s, e, tab, st.m_pos, st.m_rid, st.nev,
+                      st.victims, st.lastpos)
+    else:
+        _phase_b_general(ct, mgr, s, e, tab, st, zc_pos, zc_rid, zc_key)
+
+
+def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
+                  lastpos):
+    """Vectorised, bit-exact float accounting for one plain span (full-range
+    migrations, no pre-evictions, no zero-copy touches).
 
     Every accumulator fold is seeded with the manager's current value and
     realised with ``np.cumsum`` (an exact sequential fold), so the result
@@ -669,16 +973,10 @@ def _phase_b(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims, lastpos):
     mgr.faults_serviceable += M
 
     # duplicate faults: same deterministic jitter as SVMManager._noise
-    conc_m = ct.concs[m_pos]
-    kk = np.arange(nmig0 + 1, nmig0 + M + 1, dtype=np.uint64)
-    h = (kk * np.uint64(2654435761)
-         + np.uint64((mgr._seed * 97) & 0xFFFFFFFF)) & np.uint64(0xFFFFFFFF)
-    noise = 0.8 + 0.4 * (h.astype(np.float64) / float(0xFFFFFFFF))
-    dup = (conc_m * noise).astype(np.int64) - 1
-    np.clip(dup, 0, None, out=dup)
-    mgr.faults_duplicate += int(dup.sum())
+    dup = _synth_dup(ct, mgr, m_pos, nmig0, M)
 
     # trigger pages
+    conc_m = ct.concs[m_pos]
     trig = tab["pages"][m_rid] + ct.hints[m_pos]
     high = conc_m >= 32
     if high.any():
@@ -713,6 +1011,241 @@ def _phase_b(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims, lastpos):
                       victims, dup, trig)
 
 
+def _synth_dup(ct, mgr, m_pos, nmig0, M):
+    """Duplicate-fault synthesis: same deterministic jitter stream as
+    `SVMManager._noise`, vectorised over the span's migrations."""
+    conc_m = ct.concs[m_pos]
+    kk = np.arange(nmig0 + 1, nmig0 + M + 1, dtype=np.uint64)
+    h = (kk * np.uint64(2654435761)
+         + np.uint64((mgr._seed * 97) & 0xFFFFFFFF)) & np.uint64(0xFFFFFFFF)
+    noise = 0.8 + 0.4 * (h.astype(np.float64) / float(0xFFFFFFFF))
+    dup = (conc_m * noise).astype(np.int64) - 1
+    np.clip(dup, 0, None, out=dup)
+    mgr.faults_duplicate += int(dup.sum())
+    return dup
+
+
+def _phase_b_general(ct, mgr, s, e, tab, st: SpanStruct,
+                     zc_pos, zc_rid, zc_key=None) -> None:
+    """Bit-exact accounting for variant spans: deferred-granularity
+    migrations (per-miss byte counts, non-resident granule copies),
+    background pre-evictions (their `alloc`/wall contributions land at the
+    exact scalar add positions via an expanded trajectory), and zero-copy
+    touches (remote-access wall deltas + `zc` events in-span)."""
+    fargs = ct.fargs[s:e]
+    n_span = e - s
+    cost = mgr.cost
+    M = len(st.m_pos)
+    Z = len(zc_pos)
+    pvc = (np.asarray(st.pv_counts, dtype=np.int64)
+           if st.pv_counts is not None else np.zeros(M, dtype=np.int64))
+    P = int(pvc.sum()) if M else 0
+
+    deltas = fargs.copy()
+    if Z:
+        zc_sizes = tab["size_arr"][zc_rid]
+        zkey = ("zcc", int(zc_pos[0]), int(zc_pos[-1]), Z, zc_key,
+                mgr.params)
+        zcc = ct.span_cache.get(zkey)
+        if zcc is None:       # pure function of the zc touch stream
+            zcc = _zc_costs(tab, zc_sizes, mgr.params)
+            ct.span_cache[zkey] = zcc
+        deltas[zc_pos - s] = zcc
+
+    if M:
+        m_pos = np.asarray(st.m_pos, dtype=np.int64)
+        m_rid = np.asarray(st.m_rid, dtype=np.int64)
+        m_nev = np.asarray(st.nev, dtype=np.int64)
+        v_rid = np.asarray(st.victims, dtype=np.int64)
+        m_rel = m_pos - s
+        sizeidx = tab["sizeidx"]
+        if st.m_nbytes is None:
+            m_nb = tab["size_arr"][m_rid]
+            res_mask = None
+            terms = tab["terms"][sizeidx[m_rid]]
+        else:
+            m_nb = np.asarray(st.m_nbytes, dtype=np.int64)
+            res_mask = m_nb > 0
+            np.abs(m_nb, out=m_nb)
+            terms = _terms_for_sizes(tab, m_nb, mgr.params)
+        t1, t2, t3, t4, t5 = terms.T
+        ec_v = tab["ecs"][sizeidx[v_rid]] if len(v_rid) else np.zeros(0)
+
+        alloc = t3.copy()
+        ends = np.cumsum(m_nev)
+        starts = ends - m_nev
+        one = m_nev == 1
+        if one.any():
+            alloc[one] = t3[one] + ec_v[starts[one]]
+        for i in np.nonzero(m_nev > 1)[0].tolist():
+            a = alloc[i]
+            for j in range(starts[i], ends[i]):
+                a += ec_v[j]
+            alloc[i] = a
+        total = (((t1 + t2) + alloc) + t4) + t5
+
+        if mgr.parallel_evict:
+            base = (((t1 + t2) + t3) + t4) + t5
+            evw = np.zeros(M)
+            if one.any():
+                evw[one] = ec_v[starts[one]]
+            for i in np.nonzero(m_nev > 1)[0].tolist():
+                a = 0.0
+                for j in range(starts[i], ends[i]):
+                    a += ec_v[j]
+                evw[i] = a
+            total = np.where(m_nev > 0, np.maximum(base, evw) + 5e-6, base)
+        deltas[m_rel] = total
+
+    # wall trajectory: previct contributions are extra sequential adds
+    # *inside* a miss op, so the trajectory is folded over an expanded
+    # delta sequence and op boundaries are picked out of it
+    if P:
+        pv_vr = np.asarray(st.pv_victims, dtype=np.int64)
+        pv_ec = tab["ecs"][tab["sizeidx"][pv_vr]]
+        pv_wall = pv_ec * (1.0 - mgr.previct_overlap)
+        pvc_at_op = np.zeros(n_span, dtype=np.int64)
+        pvc_at_op[m_rel] = pvc
+        cum_pv = np.cumsum(pvc_at_op)
+        didx = np.arange(n_span) + (cum_pv - pvc_at_op)
+        exp = np.zeros(n_span + P)
+        exp[didx] = deltas
+        miss_didx = didx[m_rel]
+        pv_starts = np.cumsum(pvc) - pvc
+        intra = np.arange(P) - np.repeat(pv_starts, pvc)
+        pv_slots = np.repeat(miss_didx, pvc) + 1 + intra
+        exp[pv_slots] = pv_wall
+        traj = np.cumsum(np.concatenate(([mgr.wall], exp)))
+        op_start = traj[didx]
+        op_end = traj[didx + 1 + pvc_at_op]
+        w_mid = traj[miss_didx + 1]
+        pv_event_wall = traj[pv_slots]
+    else:
+        pv_ec = np.zeros(0)
+        pv_vr = _EMPTY_I
+        pv_event_wall = np.zeros(0)
+        traj = np.cumsum(np.concatenate(([mgr.wall], deltas)))
+        op_start = traj[:-1]
+        op_end = traj[1:]
+        w_mid = op_end[m_rel] if M else np.zeros(0)
+    mgr.wall = float(traj[-1])
+    mgr.compute_time = float(
+        np.cumsum(np.concatenate(([mgr.compute_time], fargs)))[-1])
+
+    if Z:
+        mgr.n_zerocopy += Z
+        mgr.bytes_zerocopy += int(zc_sizes.sum())
+
+    dup = trig = None
+    if M:
+        # five-term ledger with previct `alloc` charges interleaved at
+        # their scalar positions (zero rows elsewhere: +0.0 is add-identity
+        # for the non-negative accumulators)
+        miss_rows = np.arange(M) + (np.cumsum(pvc) - pvc)
+        R = M + P
+        ledger = np.zeros((R + 1, 5))
+        ledger[0] = (cost.cpu_unmap, cost.sdma_setup, cost.alloc,
+                     cost.cpu_update, cost.misc)
+        ledger[miss_rows + 1, 0] = t1
+        ledger[miss_rows + 1, 1] = t2
+        ledger[miss_rows + 1, 2] = alloc
+        ledger[miss_rows + 1, 3] = t4
+        ledger[miss_rows + 1, 4] = t5
+        if P:
+            pv_rows = np.repeat(miss_rows, pvc) + 1 + intra
+            ledger[pv_rows + 1, 2] = pv_ec
+        (cost.cpu_unmap, cost.sdma_setup, cost.alloc, cost.cpu_update,
+         cost.misc) = np.cumsum(ledger, axis=0)[-1].tolist()
+
+        # evict_cost_total: per miss, blocking evictions then previcts —
+        # scatter both streams into one sequence at their interleaved
+        # positions (blocking ec j of miss i lands after all previcts of
+        # earlier misses; previct j of miss i after miss i's blockers)
+        if P == 0:
+            ec_seq = ec_v
+        elif len(ec_v) == 0:
+            ec_seq = pv_ec
+        else:
+            ec_seq = np.empty(len(ec_v) + P)
+            ec_seq[np.arange(len(ec_v))
+                   + np.repeat(pv_starts, m_nev)] = ec_v
+            ec_seq[np.arange(P) + np.repeat(ends, pvc)] = pv_ec
+        if len(ec_seq):
+            mgr.evict_cost_total = float(np.cumsum(
+                np.concatenate(([mgr.evict_cost_total], ec_seq)))[-1])
+
+        # counters
+        nmig0 = mgr.n_migrations
+        mgr.n_migrations = nmig0 + M
+        mgr.n_evictions += len(st.victims) + P
+        mgr.bytes_migrated += int(m_nb.sum())
+        ev_bytes = 0
+        if len(v_rid):
+            ev_bytes += int(tab["size_arr"][v_rid].sum())
+        if P:
+            ev_bytes += int(tab["size_arr"][pv_vr].sum())
+        mgr.bytes_evicted += ev_bytes
+        mgr.faults_serviceable += M
+
+        dup = _synth_dup(ct, mgr, m_pos, nmig0, M)
+
+        conc_m = ct.concs[m_pos]
+        trig = tab["pages"][m_rid] + ct.hints[m_pos]
+        high = conc_m >= 32
+        if high.any():
+            mgr.trigger_pages.update(
+                np.concatenate([trig, trig[high] + 1]).tolist())
+        else:
+            mgr.trigger_pages.update(trig.tolist())
+
+        n_ev_total = len(st.victims) + P
+        if n_ev_total:
+            mgr.eviction_epoch += n_ev_total
+            if mgr._evict_listeners:
+                if P == 0:
+                    ordered = st.victims
+                elif not st.victims:
+                    ordered = st.pv_victims
+                else:
+                    ordered = []
+                    for i in range(M):
+                        ordered.extend(
+                            st.victims[starts[i]:ends[i]])
+                        ordered.extend(
+                            st.pv_victims[pv_starts[i]:pv_starts[i]
+                                          + pvc[i]])
+                for v in ordered:
+                    for cb in mgr._evict_listeners:
+                        cb(v)
+
+    # patch the (write-only) policy timestamps of surviving queue entries
+    q = getattr(mgr.policy, "_q", None)
+    if q is not None:
+        if st.lastpos is None:        # LRF: inserts happen only on misses
+            if M:
+                wm = w_mid.tolist()
+                res_l = res_mask.tolist() if res_mask is not None else None
+                m_rid_l = (st.m_rid.tolist()
+                           if isinstance(st.m_rid, np.ndarray) else st.m_rid)
+                for j, rid in enumerate(m_rid_l):
+                    if res_l is not None and not res_l[j]:
+                        continue      # deferred granule: never inserted
+                    if rid in q:
+                        q[rid] = wm[j]
+        elif st.lastpos:
+            pol_wall = op_end.copy()
+            if M:
+                pol_wall[m_rel] = w_mid
+            for rid, k in st.lastpos.items():
+                if rid in q:
+                    q[rid] = float(pol_wall[k - s])
+
+    if mgr.profile:
+        _emit_profile_general(ct, mgr, s, tab, st, zc_pos, zc_rid,
+                              op_start, op_end, w_mid, pv_event_wall,
+                              dup, trig)
+
+
 def _emit_profile(ct, mgr, s, tab, traj, m_pos, miss_rid, starts, ends,
                   victims, dup, trig):
     events = mgr.events
@@ -735,3 +1268,64 @@ def _emit_profile(ct, mgr, s, tab, traj, m_pos, miss_rid, starts, ends,
         events.append(Event(w_after, "mig", rid, alloc_ids[rid], sizes[rid]))
         density.append(DensitySample(w_after, rid, alloc_ids[rid],
                                      1 + dup_l[i], trig_l[i]))
+
+
+def _emit_profile_general(ct, mgr, s, tab, st: SpanStruct, zc_pos, zc_rid,
+                          op_start, op_end, w_mid, pv_event_wall,
+                          dup, trig):
+    """Scalar-ordered event/density emission for variant spans: blocking
+    evictions at the pre-migration wall, the migration at its mid-op wall,
+    pre-evictions at their per-eviction walls, zero-copy events at their
+    post-touch walls — merged in op order."""
+    events = mgr.events
+    density = mgr.density
+    alloc_ids = tab["alloc_ids"]
+    sizes = tab["sizes"]
+    M = len(st.m_pos)
+    victims = st.victims
+    pv_victims = st.pv_victims or []
+    m_rel = [p - s for p in (st.m_pos.tolist()
+                             if isinstance(st.m_pos, np.ndarray)
+                             else st.m_pos)]
+    m_rid_l = (st.m_rid.tolist() if isinstance(st.m_rid, np.ndarray)
+               else st.m_rid)
+    zc_rel = (zc_pos - s).tolist()
+    zc_rid_l = zc_rid.tolist()
+    nev_l = st.nev.tolist() if M else []
+    pvc_l = (st.pv_counts if st.pv_counts is not None else [0] * M)
+    nb_l = (np.abs(np.asarray(st.m_nbytes, dtype=np.int64)).tolist()
+            if st.m_nbytes is not None
+            else [sizes[r] for r in m_rid_l])
+    op_start_l = op_start.tolist()
+    op_end_l = op_end.tolist()
+    w_mid_l = w_mid.tolist() if M else []
+    pv_wall_l = pv_event_wall.tolist()
+    dup_l = dup.tolist() if dup is not None else []
+    trig_l = trig.tolist() if trig is not None else []
+    mi = zi = 0
+    vcur = pvcur = 0
+    while mi < M or zi < len(zc_rel):
+        if zi >= len(zc_rel) or (mi < M and m_rel[mi] < zc_rel[zi]):
+            p = m_rel[mi]
+            rid = m_rid_l[mi]
+            w0 = op_start_l[p]
+            for _ in range(nev_l[mi]):
+                v = victims[vcur]
+                vcur += 1
+                events.append(Event(w0, "evt", v, alloc_ids[v], sizes[v]))
+            wm = w_mid_l[mi]
+            events.append(Event(wm, "mig", rid, alloc_ids[rid], nb_l[mi]))
+            density.append(DensitySample(wm, rid, alloc_ids[rid],
+                                         1 + dup_l[mi], trig_l[mi]))
+            for _ in range(pvc_l[mi]):
+                v = pv_victims[pvcur]
+                events.append(Event(pv_wall_l[pvcur], "evt", v,
+                                    alloc_ids[v], sizes[v]))
+                pvcur += 1
+            mi += 1
+        else:
+            p = zc_rel[zi]
+            rid = zc_rid_l[zi]
+            events.append(Event(op_end_l[p], "zc", rid, alloc_ids[rid],
+                                sizes[rid]))
+            zi += 1

@@ -82,9 +82,11 @@ def simulate(
 
     ``engine="batched"`` lowers the trace through the compiled-trace engine
     (`repro.core.engine`) — bit-identical to the scalar path, typically an
-    order of magnitude faster; ``engine="scalar"`` forces the per-op
-    `apply_trace` loop (also used automatically for non-SVM managers and
-    driver variants the fast tier does not model)."""
+    order of magnitude faster.  The engine dispatches on the manager type
+    (`SVMManager` and `UVMManager` each have a batched interpreter; any
+    other manager replays op-for-op); every §4.2 driver variant runs on
+    the fast tier.  ``engine="scalar"`` forces the per-op `apply_trace`
+    loop."""
     if engine not in ("batched", "scalar"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "available: 'batched', 'scalar'")
@@ -95,13 +97,15 @@ def simulate(
     for a in space.allocations:
         if a.name in zero_copy_alloc_names:
             mgr.set_zero_copy(a.alloc_id)
-    use_engine = engine == "batched" and manager_cls is SVMManager
-    if use_engine:
+    if engine == "batched":
         from repro.core.engine import compile_workload, execute_compiled
         execute_compiled(compile_workload(workload, space, max_ops=max_ops),
                          mgr)
     else:
         apply_trace(mgr, workload.trace(space), max_ops=max_ops)
+    flush = getattr(mgr, "flush", None)
+    if flush is not None:            # end-of-trace driver sync (UVM)
+        flush()
     wall = max(mgr.wall, 1e-12)
     return RunResult(
         workload=workload.name,
@@ -148,7 +152,9 @@ def dos_sweep(
     policy: str = "lrf",
     params: CostParams = MI250X,
     engine: str = "batched",
+    manager: str = "svm",
     jobs: int = 0,
+    cache_dir: str | None = None,
     **mgr_kwargs,
 ) -> list[dict]:
     """Run a workload at several problem sizes (expressed as target DOS %)
@@ -159,41 +165,50 @@ def dos_sweep(
     serially in-process) or a picklable spec tuple ``(name, kwargs)``
     resolved via `repro.core.traces.make_workload`, which additionally
     allows fanning the DOS points out across ``jobs`` worker processes
-    (see `repro.core.sweep`)."""
+    with an optional content-keyed on-disk ``cache_dir``
+    (see `repro.core.sweep`).  When ``normalize_at`` is not one of
+    ``dos_values``, the anchor point rides in the same `run_sweep` batch
+    as the main rows — same cache, worker fan-out, and engine selection."""
     dos_values = list(dos_values)
+    anchor_idx = next((i for i, d in enumerate(dos_values)
+                       if abs(d - normalize_at) < 1e-9), None)
     if not callable(make_workload):
         from repro.core.sweep import SweepPoint, run_sweep
         name, wl_kwargs = make_workload
-        points = [
-            SweepPoint.make(name, capacity_bytes * dos / 100.0,
-                            capacity_bytes, policy=policy,
-                            wl_kwargs=dict(wl_kwargs),
-                            mgr_kwargs=mgr_kwargs, engine=engine)
-            for dos in dos_values
-        ]
-        rows = run_sweep(points, jobs=jobs, params=params)
+
+        def point(dos):
+            return SweepPoint.make(name, capacity_bytes * dos / 100.0,
+                                   capacity_bytes, policy=policy,
+                                   wl_kwargs=dict(wl_kwargs),
+                                   mgr_kwargs=mgr_kwargs, engine=engine,
+                                   manager=manager)
+
+        points = [point(dos) for dos in dos_values]
+        if anchor_idx is None:
+            points.append(point(normalize_at))
+        all_rows = run_sweep(points, jobs=jobs, params=params,
+                             cache_dir=cache_dir)
+        rows = all_rows[:len(dos_values)]
+        base_thr = (rows[anchor_idx] if anchor_idx is not None
+                    else all_rows[-1])["throughput"]
     else:
+        from repro.core.sweep import MANAGERS
+        manager_cls = MANAGERS[manager]
         rows = []
         for dos in dos_values:
             wl = make_workload(int(capacity_bytes * dos / 100.0))
             res = simulate(wl, capacity_bytes, policy=policy, params=params,
-                           profile=False, engine=engine, **mgr_kwargs)
+                           profile=False, engine=engine,
+                           manager_cls=manager_cls, **mgr_kwargs)
             rows.append(res.row())
-    base_thr = None
-    for dos, row in zip(dos_values, rows):
-        if abs(dos - normalize_at) < 1e-9:
-            base_thr = row["throughput"]
-    if base_thr is None:  # fall back to an extra run at the anchor point
-        if not callable(make_workload):
-            name, wl_kwargs = make_workload
-            from repro.core.traces import make_workload as _mk
-            wl = _mk(name, int(capacity_bytes * normalize_at / 100.0),
-                     **dict(wl_kwargs))
+        if anchor_idx is not None:
+            base_thr = rows[anchor_idx]["throughput"]
         else:
             wl = make_workload(int(capacity_bytes * normalize_at / 100.0))
-        base_thr = simulate(wl, capacity_bytes, policy=policy, params=params,
-                            profile=False, engine=engine,
-                            **mgr_kwargs).throughput
+            base_thr = simulate(wl, capacity_bytes, policy=policy,
+                                params=params, profile=False, engine=engine,
+                                manager_cls=manager_cls,
+                                **mgr_kwargs).throughput
     for row in rows:
         row["norm_perf"] = row["throughput"] / base_thr
     return rows

@@ -33,6 +33,10 @@ Beyond-paper / §4.2 driver variants (all selectable):
   * ``previct_watermark`` — background pre-eviction below a free-space
     watermark (beyond paper; cf. Li et al. ASPLOS'19), removing eviction
     from the critical path at the cost of mild contention.
+
+All of the above run on the compiled-trace fast tier (`repro.core.engine`)
+with byte-identical `summary()` output — no variant drops a sweep to the
+scalar per-op path anymore.
 """
 
 from __future__ import annotations

@@ -49,7 +49,9 @@ class SweepPoint:
     ``wl_kwargs``/``mgr_kwargs`` are sorted ``(key, value)`` tuples so the
     point is hashable and its JSON form is canonical.  ``zero_copy`` is a
     tuple of allocation names, or the sentinel ``"biggest"`` (resolved in
-    the worker to the workload's largest allocation)."""
+    the worker to the workload's largest allocation).  ``manager`` selects
+    the driver model: ``"svm"`` (default) or ``"uvm"`` (Table-1
+    baseline)."""
 
     workload: str
     total_bytes: int
@@ -60,20 +62,22 @@ class SweepPoint:
     zero_copy: tuple | str = ()
     engine: str = "batched"
     profile: bool = False
+    manager: str = "svm"
 
     @classmethod
     def make(cls, workload: str, total_bytes: int, capacity: int, *,
              policy: str = "lrf", wl_kwargs: dict | None = None,
              mgr_kwargs: dict | None = None,
              zero_copy: tuple | str = (), engine: str = "batched",
-             profile: bool = False) -> "SweepPoint":
+             profile: bool = False, manager: str = "svm") -> "SweepPoint":
         """Build a point from plain dict kwargs, owning the sorted-tuple
         normalisation so every call site produces identical cache keys."""
         return cls(workload=workload, total_bytes=int(total_bytes),
                    capacity=capacity, policy=policy,
                    wl_kwargs=tuple(sorted((wl_kwargs or {}).items())),
                    mgr_kwargs=tuple(sorted((mgr_kwargs or {}).items())),
-                   zero_copy=zero_copy, engine=engine, profile=profile)
+                   zero_copy=zero_copy, engine=engine, profile=profile,
+                   manager=manager)
 
     def key(self, params: CostParams) -> str:
         blob = json.dumps(
@@ -81,6 +85,26 @@ class SweepPoint:
              _code_digest()],
             sort_keys=True, default=str)
         return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _managers() -> dict:
+    from repro.core.svm import SVMManager
+    from repro.core.uvm import UVMManager
+    return {"svm": SVMManager, "uvm": UVMManager}
+
+
+class _ManagerMap:
+    """Lazy name -> manager-class map (avoids import cycles at load)."""
+
+    def __getitem__(self, name: str):
+        try:
+            return _managers()[name]
+        except KeyError:
+            raise ValueError(f"unknown manager {name!r}; "
+                             f"available: {sorted(_managers())}") from None
+
+
+MANAGERS = _ManagerMap()
 
 
 def run_point(point: SweepPoint, params: CostParams = MI250X) -> dict:
@@ -103,6 +127,7 @@ def run_point(point: SweepPoint, params: CostParams = MI250X) -> dict:
         params=params,
         profile=point.profile,
         engine=point.engine,
+        manager_cls=MANAGERS[point.manager],
         zero_copy_alloc_names=tuple(zero_copy),
         **dict(point.mgr_kwargs),
     )

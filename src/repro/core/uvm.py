@@ -6,12 +6,29 @@ Models the NVIDIA-UVM design points the paper contrasts with SVM:
   * migration unit: 64 KB base pages, coalesced up to a VABlock by a
     density/tree prefetcher (contiguous faulting blocks in one batch are
     migrated as one transfer),
-  * **fault batching**: up to 256 faults buffered and serviced together
-    (vs SVM's immediate single-fault servicing),
-  * eviction at VABlock granularity (LRU over blocks).
+  * **fault batching**: up to ``MAX_BATCH`` faults buffered **across ops**
+    and serviced together (vs SVM's immediate single-fault servicing).
+    The buffer flushes when it reaches ``MAX_BATCH`` distinct blocks, when
+    the pending blocks no longer fit in free device memory (capacity
+    pressure), and at every driver synchronisation point: ``advance``
+    (kernel compute), ``writeback``, ``pin``, or an explicit ``flush()``
+    (the simulator flushes once at end of trace).  ``BATCH_FIXED_S`` is
+    therefore charged per *batch*, not per faulting touch.  A touch on a
+    block already sitting in the buffer is dismissed as a duplicate fault
+    (the fault CAM dedupes it) — cf. Chien et al., *Performance Evaluation
+    of Advanced Features in CUDA Unified Memory*.
+  * eviction at VABlock granularity (LRU over blocks), with **dirtiness
+    tracking**: evicting a clean block is an unmap (page-table work only,
+    no copy, no bytes moved), only dirty blocks (touched with
+    ``write=True``) pay the full device→host transfer.  Algorithmic
+    device→host copies issued via ``writeback`` are booked as writebacks
+    (``n_writebacks`` / ``bytes_writeback`` / ``writeback_cost_total``),
+    not as eviction overhead.
 
 Exposes the same trace-facing API as SVMManager (`touch`, `advance`,
-`writeback`, `pin`, `summary`) so the simulator can drive either.
+`writeback`, `pin`, `summary`) so the simulator can drive either.  The
+compiled-trace engine (`repro.core.engine`) has a batched interpreter for
+this manager with byte-identical `summary()` output.
 """
 
 from __future__ import annotations
@@ -49,21 +66,30 @@ class UVMManager:
         # resident VABlocks: block_id -> last-use time (LRU)
         self.resident: OrderedDict[int, float] = OrderedDict()
         self.pinned: set[int] = set()
+        self.dirty: set[int] = set()      # written since migration
 
         self.wall = 0.0
         self.compute_time = 0.0
         self.cost = CostVector()
         self.n_migrations = 0      # transfers (after coalescing)
         self.n_evictions = 0
+        self.n_writebacks = 0
         self.n_batches = 0
         self.bytes_migrated = 0
         self.bytes_evicted = 0
+        self.bytes_writeback = 0
+        self.evict_cost_total = 0.0
+        self.writeback_cost_total = 0.0
         self.faults_serviceable = 0
         self.faults_duplicate = 0
         self.trigger_pages: set[int] = set()
         self.events: list[Event] = []
         self.density: list = []
-        self._batch: list[int] = []   # pending faulting block ids
+        # pending faulting block ids, insertion-ordered, CAM-deduped
+        self._pending: OrderedDict[int, None] = OrderedDict()
+        # one VABlock's migration cost is a constant of `params`
+        self._mc_block = migration_cost(VABLOCK, params)
+        self._mc_block_total = self._mc_block.total()
 
     # -------------------------------------------------------------- helpers
 
@@ -77,32 +103,48 @@ class UVMManager:
               concurrency: int = 32, page_hint: int | None = None,
               write: bool = False) -> bool:
         hit = True
-        for b in self._blocks_of_range(rid):
+        blocks = self._blocks_of_range(rid)
+        for b in blocks:
             if b in self.resident:
                 self.resident.move_to_end(b)
                 self.resident[b] = self.wall
+            elif b in self._pending:
+                # already buffered: the fault CAM dedupes it
+                hit = False
+                self.faults_duplicate += 1
             else:
                 hit = False
-                self._batch.append(b)
+                self._pending[b] = None
                 self.faults_serviceable += 1
                 self.trigger_pages.add(b * (VABLOCK // 4096))
                 self.faults_duplicate += max(0, concurrency // 8)
-                if len(self._batch) >= MAX_BATCH:
+                if (len(self._pending) >= MAX_BATCH
+                        or len(self._pending) * VABLOCK >= self.free):
                     self._service_batch()
-        self._service_batch()
+        if write:
+            self.dirty.update(blocks)
         return hit
 
     def advance(self, seconds: float) -> None:
+        self.flush()     # kernel-boundary sync: service buffered faults
         self.wall += seconds
         self.compute_time += seconds
 
+    def flush(self) -> None:
+        """Service any buffered faults (driver synchronisation point)."""
+        self._service_batch()
+
     def writeback(self, rid: int) -> None:
+        """Algorithmic device→host copy (e.g. BFS frontier output): a full
+        transfer per resident block, booked as writeback — not eviction."""
+        self.flush()
         for b in self._blocks_of_range(rid):
             if b in self.resident:
-                self._evict(b)
+                self._writeback_block(b)
 
     def pin(self, rid: int) -> None:
         self.touch(rid, concurrency=1)
+        self.flush()     # blocks must be resident before they leave the LRU
         for b in self._blocks_of_range(rid):
             self.pinned.add(b)
             self.resident.pop(b, None)  # memory accounting unchanged
@@ -116,10 +158,10 @@ class UVMManager:
     # ------------------------------------------------------------ internals
 
     def _service_batch(self) -> None:
-        if not self._batch:
+        if not self._pending:
             return
-        blocks = sorted(set(self._batch))
-        self._batch.clear()
+        blocks = sorted(self._pending)
+        self._pending.clear()
         self.n_batches += 1
         self.wall += BATCH_FIXED_S + PER_FAULT_S * len(blocks)
         # tree/density prefetcher: coalesce contiguous faulting blocks
@@ -161,16 +203,45 @@ class UVMManager:
         raise RuntimeError("UVM: all resident blocks pinned")
 
     def _evict(self, b: int) -> None:
-        mc = migration_cost(VABLOCK, self.params).total()
-        self.cost.alloc += mc
-        self.wall += mc
+        """LRU capacity eviction: dirty blocks pay the full device→host
+        transfer (charged to `alloc`, mirroring SVM's eviction booking);
+        clean blocks are dropped with page-table unmap work only — no copy,
+        no bytes counted."""
+        if b in self.dirty:
+            w = self._mc_block_total
+            self.cost.alloc += w
+            self.evict_cost_total += w
+            self.bytes_evicted += VABLOCK
+            self.dirty.discard(b)
+        else:
+            w = self._mc_block.cpu_unmap
+            self.cost.cpu_unmap += w
+        self.wall += w
         self.resident.pop(b, None)
         self.free += VABLOCK
         self.n_evictions += 1
-        self.bytes_evicted += VABLOCK
         if self.profile:
             rid = self._rid_of_block(b)
             self.events.append(Event(self.wall, "evt", rid,
+                                     self.space.ranges[rid].alloc_id, VABLOCK))
+
+    def _writeback_block(self, b: int) -> None:
+        """Device→host transfer of one block on behalf of the application;
+        the block is dropped after the copy (its data now lives on the
+        host).  Booked per cost term (a real five-phase transfer) and in
+        the writeback counters."""
+        w = self._mc_block_total
+        self.cost.add(self._mc_block)
+        self.writeback_cost_total += w
+        self.wall += w
+        self.resident.pop(b, None)
+        self.dirty.discard(b)
+        self.free += VABLOCK
+        self.n_writebacks += 1
+        self.bytes_writeback += VABLOCK
+        if self.profile:
+            rid = self._rid_of_block(b)
+            self.events.append(Event(self.wall, "wb", rid,
                                      self.space.ranges[rid].alloc_id, VABLOCK))
 
     # ------------------------------------------------------------- metrics
@@ -189,10 +260,12 @@ class UVMManager:
             "compute_s": self.compute_time,
             "migrations": self.n_migrations,
             "evictions": self.n_evictions,
+            "writebacks": self.n_writebacks,
             "batches": self.n_batches,
             "evict_to_mig": self.evict_to_mig_ratio,
             "bytes_migrated": self.bytes_migrated,
             "bytes_evicted": self.bytes_evicted,
+            "bytes_writeback": self.bytes_writeback,
             "faults_serviceable": self.faults_serviceable,
             "faults_duplicate": self.faults_duplicate,
             "cost_breakdown": self.cost.as_dict(),

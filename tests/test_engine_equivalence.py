@@ -4,7 +4,9 @@ The engine's contract is *byte-identical* `summary()` output — every float
 (wall, cost terms, fault densities) compared with ``==``, no tolerances —
 for every Table-2 workload at DOS 78/109/147 under all four eviction
 policies, plus the §4.2 driver variants and the op-for-op manager end
-state (residency, free bytes, queue order, profile events)."""
+state (residency, free bytes, queue order, profile events).  The full
+variant × policy × DOS cross-product (defer / previct / zero-copy / UVM)
+lives in tests/test_engine_variants.py."""
 
 import pytest
 
@@ -72,9 +74,9 @@ def test_golden_svm_aware_variants(cls, aware):
 
 @pytest.mark.parametrize("kw", [
     {"parallel_evict": True},
-    {"zero_copy_alloc_names": ("b",)},
-    {"defer_granule": 2 * MB, "defer_k": 3},       # scalar-fallback path
-    {"previct_watermark": 0.1},                    # scalar-fallback path
+    {"zero_copy_alloc_names": ("b",)},     # in-span zero-copy fast path
+    {"defer_granule": 2 * MB, "defer_k": 3},       # batched since PR 2
+    {"previct_watermark": 0.1},                    # batched since PR 2
 ])
 def test_golden_driver_variants(kw):
     scalar, batched = _pair(

@@ -1,0 +1,382 @@
+"""Golden equivalence for the full-variant fast tier (PR 2).
+
+Every §4.2 driver variant (deferred granularity, pre-eviction watermark,
+zero-copy) and the UVM baseline manager now execute on the batched engine;
+this suite pins the byte-identical-`summary()` contract for those
+configurations against the scalar path, plus the fixed UVM fault-batching
+and dirtiness/writeback accounting semantics, and the `dos_sweep` anchor
+routing through the sweep runner."""
+
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    AddressSpace,
+    SweepPoint,
+    UVMManager,
+    VABLOCK,
+    dos_sweep,
+    run_point,
+    simulate,
+)
+from repro.core.engine import compile_trace, execute_compiled
+from repro.core.simulator import apply_trace
+from repro.core.svm import SVMManager
+from repro.core.traces import WORKLOADS, make_workload
+from repro.core.uvm import MAX_BATCH
+
+CAP = 4 * GB
+DOS_POINTS = (78, 109, 147)
+POLICIES = ("lrf", "lru", "clock", "random")
+
+VARIANTS = {
+    "defer": {"defer_granule": 2 * MB, "defer_k": 3},
+    "previct": {"previct_watermark": 0.1},
+    "defer_previct": {"defer_granule": 4 * MB, "defer_k": 2,
+                      "previct_watermark": 0.12},
+    "previct_parallel": {"previct_watermark": 0.1, "parallel_evict": True},
+}
+
+
+def _pair(workload, policy="lrf", profile=False, cap=CAP, **kw):
+    scalar = simulate(workload(), cap, policy=policy, profile=profile,
+                      engine="scalar", **kw)
+    batched = simulate(workload(), cap, policy=policy, profile=profile,
+                       engine="batched", **kw)
+    return scalar, batched
+
+
+def _assert_equiv(scalar, batched, profile=False):
+    assert scalar.summary == batched.summary
+    ms, mb = scalar.manager, batched.manager
+    assert ms.resident == mb.resident
+    assert ms.free == mb.free
+    assert ms.pinned == mb.pinned
+    if profile:
+        assert ms.events == mb.events
+        assert ms.density == mb.density
+
+
+# ------------------------------------------------------------ SVM variants
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_golden_variant_policies(variant, policy):
+    kw = VARIANTS[variant]
+    for dos in DOS_POINTS:
+        scalar, batched = _pair(
+            lambda: make_workload("jacobi2d", int(CAP * dos / 100)),
+            policy, **kw)
+        _assert_equiv(scalar, batched)
+        assert scalar.manager._defer_count == batched.manager._defer_count
+
+
+@pytest.mark.parametrize("name", ("stream", "sgemm", "gesummv", "bfs"))
+@pytest.mark.parametrize("variant", ("defer", "previct"))
+def test_golden_variant_workloads(name, variant):
+    for dos in (109, 147):
+        scalar, batched = _pair(
+            lambda: make_workload(name, int(CAP * dos / 100)),
+            **VARIANTS[variant])
+        _assert_equiv(scalar, batched)
+
+
+@pytest.mark.parametrize("name,zc", [("stream", ("b",)),
+                                     ("gesummv", ("A",)),
+                                     ("sgemm", ("B",))])
+def test_golden_zero_copy_in_span(name, zc):
+    """Zero-copy touches run in-span (they no longer break spans)."""
+    for extra in ({}, VARIANTS["defer"], VARIANTS["previct"]):
+        scalar, batched = _pair(
+            lambda: make_workload(name, int(CAP * 1.25)),
+            zero_copy_alloc_names=zc, **extra)
+        _assert_equiv(scalar, batched)
+        assert batched.summary["wall_s"] == scalar.summary["wall_s"]
+        assert batched.manager.n_zerocopy == scalar.manager.n_zerocopy
+        assert batched.manager.bytes_zerocopy == scalar.manager.bytes_zerocopy
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_golden_variant_profile_events(variant):
+    scalar, batched = _pair(
+        lambda: make_workload("stream", int(CAP * 1.25)),
+        profile=True, **VARIANTS[variant])
+    _assert_equiv(scalar, batched, profile=True)
+
+
+def test_golden_zero_copy_profile_events():
+    scalar, batched = _pair(
+        lambda: make_workload("stream", int(CAP * 1.25)),
+        profile=True, zero_copy_alloc_names=("b",))
+    _assert_equiv(scalar, batched, profile=True)
+
+
+# -------------------------------------------------------------- UVM tier
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_golden_uvm_summary_identical(name):
+    kw = {"retry_override": 1} if name in ("mvt", "gesummv") else {}
+    for dos in DOS_POINTS:
+        scalar, batched = _pair(
+            lambda: make_workload(name, int(CAP * dos / 100), **kw),
+            manager_cls=UVMManager)
+        assert scalar.summary == batched.summary
+        ms, mb = scalar.manager, batched.manager
+        assert ms.resident == mb.resident          # exact LRU order
+        assert ms.free == mb.free
+        assert ms.pinned == mb.pinned
+        assert ms.dirty == mb.dirty
+        assert ms._pending == mb._pending
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgemm", {"svm_aware": True}),      # pin/unpin boundary ops
+    ("bfs", {}),                         # writeback ops
+    ("gesummv", {}),                     # natural retry thrash (storms)
+])
+def test_golden_uvm_boundary_ops_and_profile(name, kw):
+    scalar, batched = _pair(
+        lambda: make_workload(name, int(CAP * 1.09), **kw),
+        profile=True, manager_cls=UVMManager)
+    assert scalar.summary == batched.summary
+    assert scalar.manager.events == batched.manager.events
+    assert scalar.manager.resident == batched.manager.resident
+
+
+# ------------------------------------------- fixed UVM batching semantics
+
+def test_uvm_faults_buffer_across_ops():
+    """Faults accumulate across touch ops; BATCH_FIXED_S is charged per
+    batch at a sync point, not per faulting touch."""
+    space = AddressSpace(2 * GB, base=0)
+    space.alloc(64 * MB, "a")          # 1 range, 32 VABlocks
+    m = UVMManager(space)
+    m.touch(0)
+    assert m.n_batches == 0            # buffered, nothing serviced yet
+    assert m.n_migrations == 0
+    assert len(m._pending) == 32
+    assert m.faults_serviceable == 32
+    m.flush()
+    assert m.n_batches == 1            # one batch for the whole range
+    assert m.n_migrations == 1         # coalesced into one transfer
+    assert m.bytes_migrated == 64 * MB
+    assert not m._pending
+
+
+def test_uvm_batch_flushes_at_max_batch_and_advance():
+    space = AddressSpace(4 * GB, base=0)     # alignment 128 MB
+    space.alloc(640 * MB, "a")               # 5 ranges x 64 VABlocks
+    m = UVMManager(space)
+    for r in space.ranges[:4]:
+        m.touch(r.rid)                       # 256 faults: flush on the last
+    assert m.n_batches == 1
+    assert m.faults_serviceable == 4 * 64
+    assert not m._pending                    # MAX_BATCH flush drained it
+    assert m.faults_serviceable % MAX_BATCH == 0
+    m.touch(space.ranges[4].rid)
+    assert m.n_batches == 1 and len(m._pending) == 64
+    m.advance(1e-3)                          # kernel boundary flushes
+    assert m.n_batches == 2
+    assert not m._pending
+
+
+def test_uvm_batch_flushes_under_capacity_pressure():
+    space = AddressSpace(8 * MB, base=0)     # 4 VABlocks of capacity
+    for i in range(4):
+        space.alloc(2 * MB, f"m{i}")
+    m = UVMManager(space)
+    for rid in range(3):
+        m.touch(rid)
+    assert m.n_batches == 0                  # 3 x 2MB < 8MB free
+    m.touch(3)                               # 4 x 2MB >= free: flush
+    assert m.n_batches == 1
+    assert not m._pending
+
+
+def test_uvm_duplicate_faults_dismissed_while_pending():
+    space = AddressSpace(2 * GB, base=0)
+    space.alloc(64 * MB, "a")
+    m = UVMManager(space)
+    m.touch(0, concurrency=0)
+    dups_before = m.faults_duplicate
+    serviceable_before = m.faults_serviceable
+    m.touch(0, concurrency=0)      # same 32 blocks, still buffered
+    assert m.faults_serviceable == serviceable_before
+    assert m.faults_duplicate == dups_before + 32
+
+
+def test_uvm_clean_evictions_are_unmap_only():
+    space = AddressSpace(8 * MB, base=0)
+    for i in range(5):
+        space.alloc(2 * MB, f"m{i}")
+    m = UVMManager(space)
+    for rid in range(5):
+        m.touch(rid)
+    m.flush()
+    assert m.n_evictions > 0
+    assert m.bytes_evicted == 0              # never written: no copy back
+    assert m.evict_cost_total == 0.0
+    assert m.cost.cpu_unmap > 0.0            # unmap work only
+
+
+def test_uvm_dirty_evictions_pay_the_transfer():
+    space = AddressSpace(8 * MB, base=0)
+    for i in range(5):
+        space.alloc(2 * MB, f"m{i}")
+    m = UVMManager(space)
+    for rid in range(4):
+        m.touch(rid, write=True)
+    m.flush()
+    m.touch(4)                               # evicts a dirty block
+    m.flush()
+    assert m.n_evictions > 0
+    assert m.bytes_evicted == m.n_evictions * VABLOCK
+    assert m.evict_cost_total > 0.0
+
+
+def test_uvm_writeback_booked_as_writeback_not_eviction():
+    space = AddressSpace(2 * GB, base=0)
+    space.alloc(64 * MB, "a")
+    m = UVMManager(space)
+    m.touch(0)
+    m.writeback(0)
+    assert m.n_writebacks == 32
+    assert m.bytes_writeback == 64 * MB
+    assert m.writeback_cost_total > 0.0
+    assert m.n_evictions == 0
+    assert m.bytes_evicted == 0
+    assert m.free == space.capacity          # blocks dropped after copy
+    assert not m.resident
+
+
+# ----------------------------------------------- sweep plumbing / dispatch
+
+def test_dos_sweep_anchor_routed_through_run_sweep(tmp_path):
+    """The normalize_at fallback rides the same SweepPoint/run_sweep batch
+    as the main rows (content-keyed cache included) instead of an
+    in-process recompute."""
+    grid = (109, 125)
+    rows = dos_sweep(("stream", {}), grid, CAP, normalize_at=78.0,
+                     cache_dir=str(tmp_path))
+    # grid rows + the anchor all went through the cache
+    assert len(list(tmp_path.glob("*.json"))) == len(grid) + 1
+    anchor = run_point(SweepPoint.make("stream", CAP * 0.78, CAP))
+    for dos, row in zip(grid, rows):
+        direct = run_point(
+            SweepPoint.make("stream", CAP * dos / 100.0, CAP))
+        assert row["norm_perf"] == \
+            direct["throughput"] / anchor["throughput"]
+    # rerun: pure cache hits, identical rows
+    assert dos_sweep(("stream", {}), grid, CAP, normalize_at=78.0,
+                     cache_dir=str(tmp_path)) == rows
+
+
+def test_sweep_point_uvm_manager_axis():
+    row = run_point(SweepPoint.make("jacobi2d", CAP * 1.09, CAP,
+                                    manager="uvm"))
+    direct = simulate(make_workload("jacobi2d", int(CAP * 1.09)), CAP,
+                      profile=False, manager_cls=UVMManager).row()
+    assert row == direct
+    assert "batches" in row and "writebacks" in row
+
+
+def test_sweep_point_variants_run_batched_and_match_scalar():
+    """Acceptance: representative paper_figs grid points (defer, previct,
+    zero-copy, UVM) produce byte-identical rows on both engines."""
+    specs = [
+        dict(mgr_kwargs={"defer_granule": 2 * MB, "defer_k": 3}),
+        dict(mgr_kwargs={"previct_watermark": 0.1}),
+        dict(zero_copy="biggest"),
+        dict(manager="uvm"),
+    ]
+    for spec in specs:
+        batched = run_point(SweepPoint.make(
+            "gesummv", CAP * 1.25, CAP, engine="batched",
+            wl_kwargs=({"retry_override": 1}
+                       if spec.get("manager") == "uvm" else None),
+            **spec))
+        scalar = run_point(SweepPoint.make(
+            "gesummv", CAP * 1.25, CAP, engine="scalar",
+            wl_kwargs=({"retry_override": 1}
+                       if spec.get("manager") == "uvm" else None),
+            **spec))
+        assert batched == scalar
+
+
+def test_zero_copy_cost_cache_keyed_by_config():
+    """One CompiledTrace executed under two different zero-copy configs
+    whose zc touch streams share first/last position and count but differ
+    in range sizes must not collide in the per-span cost cache."""
+    def build():
+        space = AddressSpace(1 * GB, base=0, alignment=2 * MB)
+        a = space.alloc(2 * MB, "a")
+        c = space.alloc(16 * MB, "c")
+        d = space.alloc(64 * MB, "d")
+        a_rid = space.ranges_of(a)[0].rid
+        c_rid = space.ranges_of(c)[0].rid
+        d_rid = space.ranges_of(d)[0].rid
+        ops = [("touch", a_rid, 8, 0)]
+        ops += [("touch", c_rid, 8, 0), ("touch", d_rid, 8, 0)] * 30
+        ops += [("touch", a_rid, 8, 0)]
+        return space, a, c, d, ops
+
+    space, a, c, d, ops = build()
+    ct = compile_trace(iter(ops))
+    for zc in ((a.alloc_id, c.alloc_id), (a.alloc_id, d.alloc_id)):
+        space_s, a_, c_, d_, ops_s = build()
+        ms = SVMManager(space_s, profile=False)
+        mb = SVMManager(space, profile=False)
+        for aid in zc:
+            ms.set_zero_copy(aid)
+            mb.set_zero_copy(aid)
+        apply_trace(ms, iter(ops_s))
+        execute_compiled(ct, mb)
+        assert ms.summary() == mb.summary(), f"zc config {zc} diverged"
+
+
+def test_uvm_unpin_preserves_lru_position_of_refaulted_block():
+    """A VABlock shared by two ranges can fault back into residency while
+    pinned; unpinning it must keep its scalar LRU position (OrderedDict
+    value update, no move-to-end)."""
+    def build():
+        space = AddressSpace(12 * MB, base=0, alignment=2 * MB)
+        space.alloc(3 * MB, "a")     # ranges [0,2) and [2,3)
+        space.alloc(3 * MB, "b")     # ranges [3,4) and [4,6): [3,4)
+        space.alloc(6 * MB, "c")     # shares VABlock 1 with [2,3)
+        shared_a = 1                 # rid of [2,3)MB — block 1
+        shared_b = 2                 # rid of [3,4)MB — also block 1
+        ops = [("touch", r.rid, 8, 0) for r in space.ranges]
+        ops += [("pin", shared_a),
+                ("touch", shared_b, 8, 0),   # block 1 refaults while pinned
+                ("unpin", shared_a)]
+        ops += [("touch", r.rid, 8, 0) for r in space.ranges]
+        return space, ops
+
+    space_s, ops = build()
+    ms = UVMManager(space_s, profile=False)
+    apply_trace(ms, iter(ops))
+    ms.flush()
+    space_b, ops = build()
+    mb = UVMManager(space_b, profile=False)
+    execute_compiled(compile_trace(iter(ops)), mb)
+    mb.flush()
+    assert ms.summary() == mb.summary()
+    assert ms.resident == mb.resident
+
+
+def test_engine_dispatch_unknown_manager_replays():
+    class TracingSVM(SVMManager):
+        pass
+
+    space_a = AddressSpace(CAP, base=175 * MB)
+    space_b = AddressSpace(CAP, base=175 * MB)
+    wa = make_workload("stream", int(CAP * 1.25))
+    wb = make_workload("stream", int(CAP * 1.25))
+    wa.build(space_a)
+    wb.build(space_b)
+    ma = TracingSVM(space_a, profile=False)
+    apply_trace(ma, wa.trace(space_a))
+    mb = TracingSVM(space_b, profile=False)
+    execute_compiled(compile_trace(wb.trace(space_b)), mb)
+    assert ma.summary() == mb.summary()

@@ -26,6 +26,7 @@ def test_uvm_vablock_granularity():
     s = _space(cap=2 * GB, allocs=1, size=64 * MB)
     m = UVMManager(s)
     m.touch(0)   # range 0 covers the whole 64MB alloc (alignment 64MB)
+    m.flush()    # faults buffer across ops until a driver sync point
     assert m.bytes_migrated == 64 * MB
     assert m.n_migrations >= 1
     # second touch: all VABlocks resident -> no new faults
@@ -38,9 +39,11 @@ def test_uvm_prefetch_coalesces_contiguous_blocks():
     s = _space(cap=2 * GB, allocs=1, size=64 * MB)
     coalesced = UVMManager(s, prefetch=True)
     coalesced.touch(0)
+    coalesced.flush()
     s2 = _space(cap=2 * GB, allocs=1, size=64 * MB)
     paged = UVMManager(s2, prefetch=False)
     paged.touch(0)
+    paged.flush()
     assert coalesced.n_migrations < paged.n_migrations
     assert coalesced.bytes_migrated == paged.bytes_migrated
 
@@ -50,7 +53,9 @@ def test_uvm_evicts_at_block_granularity():
     m = UVMManager(s)
     for r in s.ranges:
         m.touch(r.rid)
+    m.flush()
     assert m.n_evictions > 0
+    # trace touches never write: capacity evictions are clean unmaps
     assert m.bytes_evicted % VABLOCK == 0
     resident_bytes = len(m.resident) * VABLOCK
     assert resident_bytes <= s.capacity
