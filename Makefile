@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-engine
+.PHONY: test bench bench-smoke bench-engine bench-gates
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,3 +15,7 @@ bench-smoke:
 
 bench-engine:
 	$(PY) benchmarks/bench_engine.py
+
+# fail if any gated BENCH_engine.json ratio is below its committed floor
+bench-gates:
+	$(PY) benchmarks/check_gates.py

@@ -1,0 +1,47 @@
+"""Enforce the committed BENCH_engine.json speedup floors.
+
+CI runs this right after the bench smoke: if any gated ratio regressed
+below its floor, the job fails.  Floors are committed here (not read from
+the JSON) so a regression can't weaken its own gate.
+
+Usage:  python benchmarks/check_gates.py [path/to/BENCH_engine.json]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# committed floors: gate key in BENCH_engine.json -> minimum ratio
+FLOORS = {
+    "gate_stream147_speedup": 10.0,     # batched vs scalar, stream DOS-147
+    "gate_variant_min_speedup": 5.0,    # §4.2 variant / UVM rows
+    "gate_compile_min_speedup": 5.0,    # columnar vs generator lowering
+}
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(path) as f:
+        bench = json.load(f)
+    failures = []
+    for key, floor in FLOORS.items():
+        val = bench.get(key)
+        if val is None:
+            failures.append(f"{key}: missing from {path}")
+        elif val < floor:
+            failures.append(f"{key}: {val:.2f}x < committed floor {floor}x")
+        else:
+            print(f"OK  {key}: {val:.2f}x >= {floor}x")
+    if failures:
+        for msg in failures:
+            print(f"FAIL {msg}", file=sys.stderr)
+        return 1
+    print("all bench gates at or above their committed floors")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,8 +7,11 @@ Sweep-shaped figures (6, 10, 11-13, beyond-paper variants) fan their
 `repro.core.sweep.run_sweep`: ``JOBS`` worker processes and a
 content-keyed on-disk cache (``CACHE_DIR``), so a rerun recomputes only
 points invalidated by code changes.  `benchmarks/run.py` exposes both as
-CLI flags.  Single-run figures ride the compiled-trace engine via
-`simulate`'s default ``engine="batched"``."""
+CLI flags.  Scheduling is grid-aware: points sharing a `trace_key` (same
+workload spec + space geometry, different policy/variant/manager) land on
+one worker and replay a single columnar-compiled trace.  Single-run
+figures ride the compiled-trace engine via `simulate`'s default
+``engine="batched"``."""
 
 from __future__ import annotations
 
@@ -151,7 +154,7 @@ def fig6_dos():
     # anchors are the trajectory signal
     rows = [("fig6_grid", us,
              f"computed={stats['computed']}_cached={stats['cached']}"
-             f"_jobs={JOBS}")]
+             f"_tracegroups={stats.get('trace_groups', 0)}_jobs={JOBS}")]
     art = {}
     for name in names:
         curve = {round(r["dos"]): round(r["norm_perf"], 4)

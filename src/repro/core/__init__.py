@@ -23,10 +23,19 @@ from repro.core.ranges import (
     split_allocation,
     svm_alignment,
 )
-from repro.core.engine import CompiledTrace, compile_trace, compile_workload, execute_compiled
+from repro.core.engine import (
+    TRACE_CACHE,
+    ColumnEmitter,
+    CompiledTrace,
+    TraceCache,
+    compile_trace,
+    compile_workload,
+    compiled_from_columns,
+    execute_compiled,
+)
 from repro.core.simulator import RunResult, Workload, apply_trace, dos_sweep, simulate
 from repro.core.svm import DensitySample, Event, SVMManager
-from repro.core.sweep import SweepPoint, run_point, run_sweep
+from repro.core.sweep import SweepPoint, run_point, run_sweep, trace_key
 from repro.core.traces import WORKLOADS, make_workload
 from repro.core.uvm import UVMManager, VABLOCK
 
@@ -41,5 +50,6 @@ __all__ = [
     "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
     "WORKLOADS", "make_workload",
     "CompiledTrace", "compile_trace", "compile_workload", "execute_compiled",
-    "SweepPoint", "run_point", "run_sweep",
+    "ColumnEmitter", "TraceCache", "TRACE_CACHE", "compiled_from_columns",
+    "SweepPoint", "run_point", "run_sweep", "trace_key",
 ]

@@ -10,6 +10,17 @@ This module lowers a trace **once** into flat NumPy op arrays
 (opcode / rid / concurrency / page-hint / float-arg columns) and executes
 them with a batched interpreter:
 
+  * **Columnar compile tier**: Table-2 workloads construct the op columns
+    *directly* (`Workload.emit_columns` via `ColumnEmitter` —
+    `np.repeat`/`np.tile`/`np.arange` over range-id arrays, no per-op
+    generator tuples); `compile_workload` dispatches to it and falls back
+    to generator lowering (`compile_trace`) for custom workloads or
+    ``max_ops`` truncation.  Compiled traces are immutable after build
+    (`CompiledTrace.freeze`) and shared **across sweep points** through an
+    in-process LRU (`TraceCache` / the module-level ``TRACE_CACHE``): each
+    worker compiles each distinct trace once and replays it across its
+    policy / variant / manager points.
+
   * **Phase A** (structure): a lean, integer-only loop over the touch ops
     of a span determines hits, misses, and the exact victim sequence,
     mutating the live policy/residency state.  Resident hits — the paper's
@@ -51,6 +62,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import weakref
+from collections import OrderedDict
 from typing import Iterable
 
 import numpy as np
@@ -66,7 +78,7 @@ from repro.core.ranges import PAGE, AddressSpace
 from repro.core.svm import DensitySample, Event, SVMManager
 from repro.core.uvm import UVMManager
 
-ENGINE_VERSION = "2"
+ENGINE_VERSION = "3"
 
 OP_TOUCH = 0
 OP_COMPUTE = 1
@@ -92,17 +104,49 @@ class CompiledTrace:
     hints: np.ndarray      # int64  — touch page hint
     fargs: np.ndarray      # float64 — compute seconds
     boundaries: np.ndarray  # int64 — indices of writeback/pin/unpin ops
-    # python-list mirrors of the touch stream (fast to iterate in Phase A)
-    touch_pos: list        # op index per touch
-    touch_rid: list        # rid per touch
     touch_pos_np: np.ndarray
     touch_rid_np: np.ndarray
     n_ops: int             # source ops consumed (incl. kernel markers)
     # per-span slices + uniqueness flags, memoised across executions
     span_cache: dict = dataclasses.field(default_factory=dict)
+    # lazy python-list mirrors of the touch stream (Phase A iterates
+    # lists); built on first execution, not at compile time — a cached
+    # trace shared across sweep points converts once
+    _touch_pos: list | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _touch_rid: list | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def touch_pos(self) -> list:
+        if self._touch_pos is None:
+            self._touch_pos = self.touch_pos_np.tolist()
+        return self._touch_pos
+
+    @property
+    def touch_rid(self) -> list:
+        if self._touch_rid is None:
+            self._touch_rid = self.touch_rid_np.tolist()
+        return self._touch_rid
 
     def __len__(self) -> int:
         return len(self.codes)
+
+    def freeze(self) -> "CompiledTrace":
+        """Mark the op columns immutable.  A frozen trace is safe to share
+        across sweep points (and cache cross-point): execution only reads
+        the columns; the `span_cache` memo stays mutable by design."""
+        for arr in (self.codes, self.rids, self.concs, self.hints,
+                    self.fargs, self.boundaries, self.touch_pos_np,
+                    self.touch_rid_np):
+            arr.flags.writeable = False
+        return self
+
+    def copy(self) -> "CompiledTrace":
+        """Cheap copy: shares the (immutable) op columns, private
+        `span_cache` — for callers that want memo isolation (e.g. driving
+        one trace from multiple threads)."""
+        return dataclasses.replace(self, span_cache={})
 
     def span(self, s: int, e: int, zc_mask=None, zc_key=None):
         """Touch-stream slice for ops [s, e): (pos_list, rid_list, pos_np,
@@ -191,28 +235,262 @@ def compile_trace(trace: Iterable, max_ops: int | None = None) -> CompiledTrace:
             fargs.append(0.0)
         else:
             raise ValueError(f"unknown trace op {tag!r}")
-    code_arr = np.array(codes, dtype=np.int8)
-    rid_arr = np.array(rids, dtype=np.int64)
-    touch_mask = code_arr == OP_TOUCH
-    touch_pos_np = np.nonzero(touch_mask)[0]
-    touch_rid_np = rid_arr[touch_mask]
-    return CompiledTrace(
-        codes=code_arr,
-        rids=rid_arr,
-        concs=np.array(concs, dtype=np.int64),
-        hints=np.array(hints, dtype=np.int64),
-        fargs=np.array(fargs, dtype=np.float64),
-        boundaries=np.nonzero(code_arr >= OP_WRITEBACK)[0],
-        touch_pos=touch_pos_np.tolist(),
-        touch_rid=touch_rid_np.tolist(),
-        touch_pos_np=touch_pos_np,
-        touch_rid_np=touch_rid_np,
-        n_ops=n_src,
+    return compiled_from_columns(
+        np.array(codes, dtype=np.int8),
+        np.array(rids, dtype=np.int64),
+        np.array(concs, dtype=np.int64),
+        np.array(hints, dtype=np.int64),
+        np.array(fargs, dtype=np.float64),
+        n_src,
     )
 
 
+def compiled_from_columns(codes: np.ndarray, rids: np.ndarray,
+                          concs: np.ndarray, hints: np.ndarray,
+                          fargs: np.ndarray, n_ops: int) -> CompiledTrace:
+    """Assemble (and freeze) a CompiledTrace from flat op columns — the
+    shared tail of generator lowering and columnar emission."""
+    touch_mask = codes == OP_TOUCH
+    touch_pos_np = np.nonzero(touch_mask)[0]
+    touch_rid_np = rids[touch_mask]
+    return CompiledTrace(
+        codes=codes,
+        rids=rids,
+        concs=concs,
+        hints=hints,
+        fargs=fargs,
+        boundaries=np.nonzero(codes >= OP_WRITEBACK)[0],
+        touch_pos_np=touch_pos_np,
+        touch_rid_np=touch_rid_np,
+        n_ops=n_ops,
+    ).freeze()
+
+
+_NEG1_I = np.array([-1], dtype=np.int64)   # shared compute-op rid chunk
+
+
+class ColumnEmitter:
+    """Builds the flat op columns directly — the columnar compile tier.
+
+    Table-2 workloads describe their access patterns as vectorised blocks
+    (`touches` over a rid array, per-row touch×k+compute `rows`, …)
+    instead of yielding per-op generator tuples; `finish()` assembles the
+    blocks into a CompiledTrace.  Op-for-op identical to lowering the
+    workload's `trace()` generator through `compile_trace` (golden-tested
+    in tests/test_columnar_traces.py).
+
+    Hot-loop cost model: *uniform* blocks (`touches`/`compute`/`pins` —
+    one opcode/concurrency/hint/farg for the whole block, the shape of
+    the per-wave loops) append four Python scalars and a rid array;
+    columns for a run of consecutive uniform blocks are materialised with
+    one `np.repeat` per column at `finish()`.  Interleaved blocks
+    (`rows`, `touch_writeback`) are prebuilt per call."""
+
+    def __init__(self):
+        # uniform-block descriptors (parallel lists)
+        self._u_code: list[int] = []
+        self._u_conc: list[int] = []
+        self._u_hint: list[int] = []
+        self._u_farg: list[float] = []
+        self._u_len: list[int] = []
+        self._u_rids: list[np.ndarray] = []
+        # ordered assembly plan: ("u", uniform idx) | ("p", 5 columns)
+        self._parts: list[tuple] = []
+        self.n_ops = 0        # source ops, incl. kernel markers
+
+    def kernel(self) -> None:
+        """Kernel-boundary marker: consumed, not materialised (matches
+        `compile_trace`), but counted toward ``n_ops``."""
+        self.n_ops += 1
+
+    def _uniform(self, code: int, rids: np.ndarray, conc: int, hint: int,
+                 farg: float, n: int) -> None:
+        self._parts.append(("u", len(self._u_len)))
+        self._u_code.append(code)
+        self._u_conc.append(conc)
+        self._u_hint.append(hint)
+        self._u_farg.append(farg)
+        self._u_len.append(n)
+        self._u_rids.append(rids)
+        self.n_ops += n
+
+    def touches(self, rids, conc: int, hint: int = 0) -> None:
+        rids = np.asarray(rids, dtype=np.int64)
+        if len(rids):
+            self._uniform(OP_TOUCH, rids, conc, hint, 0.0, len(rids))
+
+    def compute(self, seconds: float) -> None:
+        self._uniform(OP_COMPUTE, _NEG1_I, 0, 0, seconds, 1)
+
+    def pins(self, rids) -> None:
+        rids = np.asarray(rids, dtype=np.int64)
+        if len(rids):
+            self._uniform(OP_PIN, rids, 0, 0, 0.0, len(rids))
+
+    def raw(self, codes, rids, concs, hints, fargs) -> None:
+        """Prebuilt column block (already dtype-correct: int8 / int64 ×3 /
+        float64) — for fully vectorised irregular patterns.  The arrays
+        remain the caller's: `finish` copies them if they would otherwise
+        be frozen into the trace."""
+        self._parts.append(("p", (codes, rids, concs, hints, fargs), False))
+        self.n_ops += len(codes)
+
+    def rows(self, rid_cols, conc: int, fargs, hint: int = 0) -> None:
+        """Per-row interleave: k touches (the columns of ``rid_cols``,
+        one row per iteration) followed by one compute of ``fargs[i]``."""
+        rid_cols = np.asarray(rid_cols, dtype=np.int64)
+        n, k = rid_cols.shape
+        if n == 0:
+            return
+        codes = np.full(k + 1, OP_TOUCH, dtype=np.int8)
+        codes[k] = OP_COMPUTE
+        rids = np.empty((n, k + 1), dtype=np.int64)
+        rids[:, :k] = rid_cols
+        rids[:, k] = -1
+        concs = np.full(k + 1, conc, dtype=np.int64)
+        concs[k] = 0
+        hints = np.full(k + 1, hint, dtype=np.int64)
+        hints[k] = 0
+        f = np.zeros((n, k + 1))
+        f[:, k] = fargs
+        self._parts.append(("p", (np.tile(codes, n), rids.ravel(),
+                                  np.tile(concs, n), np.tile(hints, n),
+                                  f.ravel()), True))
+        self.n_ops += n * (k + 1)
+
+    def touch_writeback(self, rids, conc: int, hint: int = 0) -> None:
+        """Per-rid (touch, writeback) pairs — the BFS frontier pattern."""
+        rids = np.asarray(rids, dtype=np.int64)
+        n = len(rids)
+        if n == 0:
+            return
+        codes = np.empty(2 * n, dtype=np.int8)
+        codes[0::2] = OP_TOUCH
+        codes[1::2] = OP_WRITEBACK
+        concs = np.zeros(2 * n, dtype=np.int64)
+        concs[0::2] = conc
+        hints = np.zeros(2 * n, dtype=np.int64)
+        hints[0::2] = hint
+        self._parts.append(("p", (codes, np.repeat(rids, 2), concs, hints,
+                                  np.zeros(2 * n)), True))
+        self.n_ops += 2 * n
+
+    def _uniform_seg(self, i0: int, i1: int) -> tuple:
+        """Materialise uniform blocks [i0, i1) — one repeat per column."""
+        lens = np.asarray(self._u_len[i0:i1])
+        return (
+            np.repeat(np.array(self._u_code[i0:i1], dtype=np.int8), lens),
+            (self._u_rids[i0] if i1 - i0 == 1
+             else np.concatenate(self._u_rids[i0:i1])),
+            np.repeat(np.array(self._u_conc[i0:i1], dtype=np.int64), lens),
+            np.repeat(np.array(self._u_hint[i0:i1], dtype=np.int64), lens),
+            np.repeat(np.asarray(self._u_farg[i0:i1]), lens),
+        )
+
+    def finish(self) -> CompiledTrace:
+        segs: list[tuple] = []
+        owned = False      # does the last seg own (all of) its arrays?
+        parts = self._parts
+        i = 0
+        while i < len(parts):
+            part = parts[i]
+            if part[0] == "p":
+                segs.append(part[1])
+                owned = part[2]
+                i += 1
+                continue
+            j = i
+            while j < len(parts) and parts[j][0] == "u":
+                j += 1
+            i0, i1 = part[1], parts[j - 1][1] + 1
+            owned = i1 - i0 > 1    # single block: rid col is the caller's
+            segs.append(self._uniform_seg(i0, i1))
+            i = j
+        if not segs:
+            cols = (np.zeros(0, dtype=np.int8), _EMPTY_I.copy(),
+                    _EMPTY_I.copy(), _EMPTY_I.copy(), np.zeros(0))
+        elif len(segs) == 1:
+            # freeze must not flip writeable on caller-held arrays
+            cols = segs[0] if owned else tuple(c.copy() for c in segs[0])
+        else:
+            cols = tuple(np.concatenate([s[c] for s in segs])
+                         for c in range(5))
+        return compiled_from_columns(*cols, self.n_ops)
+
+
+class TraceCache:
+    """Small in-process LRU of compiled traces.
+
+    Keys are caller-defined (see `repro.core.sweep.trace_key`: the workload
+    spec + address-space geometry that fully determine the trace).  Entries
+    are frozen CompiledTraces, safe to replay across the policy / variant /
+    manager points of a sweep.
+
+    Memory: a live entry pins its op columns *and* its execution memos
+    (lazy touch-list mirrors, span cache) — tens of MB for a fine-grained
+    million-op trace.  Grid-aware scheduling replays a trace's points
+    back-to-back, so a handful of slots suffices; size the LRU to one
+    grid's working set and `clear()` to release everything."""
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        self._d: "OrderedDict[object, CompiledTrace]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key) -> CompiledTrace | None:
+        ct = self._d.get(key)
+        if ct is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return ct
+
+    def put(self, key, ct: CompiledTrace) -> None:
+        self._d[key] = ct
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+# process-wide default: one per sweep worker, shared by every run_point
+TRACE_CACHE = TraceCache()
+
+
 def compile_workload(workload, space: AddressSpace,
-                     max_ops: int | None = None) -> CompiledTrace:
+                     max_ops: int | None = None, *,
+                     cache: TraceCache | None = None, key=None,
+                     columnar: bool = True) -> CompiledTrace:
+    """Lower a workload's trace, preferring the columnar tier.
+
+    Table-2 workloads construct the flat op columns directly
+    (``emit_columns`` — `np.repeat`/`np.tile`/`np.arange` over range-id
+    arrays, no per-op generator tuples); custom workloads, and ``max_ops``
+    truncations (which count kernel markers op-for-op), lower the
+    generator through `compile_trace`.  With ``cache`` and ``key`` set the
+    compiled trace is memoised so sweep points sharing a workload spec
+    compile once and replay (`repro.core.sweep.trace_key`)."""
+    if cache is not None and key is not None and max_ops is None:
+        ct = cache.get(key)
+        if ct is None:
+            ct = _compile_uncached(workload, space, max_ops, columnar)
+            cache.put(key, ct)
+        return ct
+    return _compile_uncached(workload, space, max_ops, columnar)
+
+
+def _compile_uncached(workload, space, max_ops, columnar) -> CompiledTrace:
+    emit = getattr(workload, "emit_columns", None) if columnar else None
+    if emit is not None and max_ops is None:
+        return emit(space)
     return compile_trace(workload.trace(space), max_ops=max_ops)
 
 

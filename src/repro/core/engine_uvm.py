@@ -143,10 +143,16 @@ def execute_compiled_uvm(ct, mgr: UVMManager) -> None:
     MAX_BATCH, capacity pressure — the end-of-trace flush stays the
     caller's job, as with the scalar path)."""
     st = _UVMState(mgr)
-    codes = ct.codes.tolist()
-    rids = ct.rids.tolist()
-    concs = ct.concs.tolist()
-    fargs = ct.fargs.tolist()
+    # list mirrors of the op columns, memoised on the (immutable) trace:
+    # a cached CompiledTrace re-executed across sweep points — including
+    # by the SVM interpreter for other points of the same TraceKey group —
+    # converts once, not per execution
+    lists = ct.span_cache.get("uvm_lists")
+    if lists is None:
+        lists = (ct.codes.tolist(), ct.rids.tolist(),
+                 ct.concs.tolist(), ct.fargs.tolist())
+        ct.span_cache["uvm_lists"] = lists
+    codes, rids, concs, fargs = lists
     try:
         for k in range(len(codes)):
             c = codes[k]

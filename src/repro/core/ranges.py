@@ -17,12 +17,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
+import numpy as np
+
 KB = 1024
 MB = 1024 * KB
 GB = 1024 * MB
 
 MIN_ALIGNMENT = 2 * MB
 PAGE = 4 * KB  # host/device page size (faults are page-granular)
+# managed allocations are placed after the platform's prior runtime
+# reservations (paper Fig. 2) — the single source for every default base
+DEFAULT_BASE = 175 * MB
 
 
 def pow2_floor(x: int) -> int:
@@ -113,6 +118,15 @@ class AddressSpace:
         self.allocations: list[Allocation] = []
         self.ranges: list[Range] = []
         self._ranges_by_alloc: dict[int, list[Range]] = {}
+        self._size_arr: np.ndarray | None = None
+
+    def size_array(self) -> np.ndarray:
+        """Per-rid range sizes as int64 (cached; rids index `ranges`)."""
+        arr = self._size_arr
+        if arr is None or len(arr) != len(self.ranges):
+            arr = np.array([r.size for r in self.ranges], dtype=np.int64)
+            self._size_arr = arr
+        return arr
 
     def alloc(self, size: int, name: str = "") -> Allocation:
         a = Allocation(

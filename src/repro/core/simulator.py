@@ -19,7 +19,7 @@ import dataclasses
 from typing import Iterable, Iterator
 
 from repro.core.costmodel import CostParams, MI250X
-from repro.core.ranges import GB, AddressSpace
+from repro.core.ranges import DEFAULT_BASE, GB, AddressSpace
 from repro.core.svm import SVMManager
 
 Op = tuple
@@ -68,30 +68,48 @@ def simulate(
     workload: Workload,
     capacity_bytes: int = 64 * GB,
     *,
-    base: int = 175 * 1024 * 1024,
+    base: int = DEFAULT_BASE,
     params: CostParams = MI250X,
     policy: str = "lrf",
     profile: bool = True,
     max_ops: int | None = None,
     manager_cls=SVMManager,
-    zero_copy_alloc_names: tuple = (),
+    zero_copy_alloc_names: tuple | str = (),
     engine: str = "batched",
+    trace_cache=None,
+    trace_key=None,
     **mgr_kwargs,
 ) -> RunResult:
     """Simulate one workload run.
 
     ``engine="batched"`` lowers the trace through the compiled-trace engine
     (`repro.core.engine`) — bit-identical to the scalar path, typically an
-    order of magnitude faster.  The engine dispatches on the manager type
-    (`SVMManager` and `UVMManager` each have a batched interpreter; any
-    other manager replays op-for-op); every §4.2 driver variant runs on
-    the fast tier.  ``engine="scalar"`` forces the per-op `apply_trace`
-    loop."""
+    order of magnitude faster.  Table-2 workloads lower through the
+    columnar tier (`Workload.emit_columns`); with ``trace_cache`` (a
+    `repro.core.engine.TraceCache`) and ``trace_key`` set, the compiled
+    trace is shared across runs with the same workload spec + space
+    geometry (see `repro.core.sweep.trace_key`).  The engine dispatches on
+    the manager type (`SVMManager` and `UVMManager` each have a batched
+    interpreter; any other manager replays op-for-op); every §4.2 driver
+    variant runs on the fast tier.  ``engine="scalar"`` forces the per-op
+    `apply_trace` loop.
+
+    ``zero_copy_alloc_names`` may be the sentinel ``"biggest"``: it
+    resolves to the workload's largest allocation of the *same build* used
+    for simulation."""
     if engine not in ("batched", "scalar"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "available: 'batched', 'scalar'")
     space = AddressSpace(capacity_bytes, base=base)
     workload.build(space)
+    if zero_copy_alloc_names == "biggest":
+        zero_copy_alloc_names = (
+            max(space.allocations, key=lambda a: a.size).name,)
+    elif isinstance(zero_copy_alloc_names, str):
+        # a bare name would silently substring-match via `in` below
+        raise ValueError("zero_copy_alloc_names must be a tuple of "
+                         "allocation names or the sentinel 'biggest'; got "
+                         f"{zero_copy_alloc_names!r}")
     mgr = manager_cls(space, policy=policy, params=params, profile=profile,
                       **mgr_kwargs)
     for a in space.allocations:
@@ -99,7 +117,8 @@ def simulate(
             mgr.set_zero_copy(a.alloc_id)
     if engine == "batched":
         from repro.core.engine import compile_workload, execute_compiled
-        execute_compiled(compile_workload(workload, space, max_ops=max_ops),
+        execute_compiled(compile_workload(workload, space, max_ops=max_ops,
+                                          cache=trace_cache, key=trace_key),
                          mgr)
     else:
         apply_trace(mgr, workload.trace(space), max_ops=max_ops)

@@ -12,6 +12,14 @@ hits.
 Points are plain data (workload *name* + kwargs, resolved via
 `repro.core.traces.make_workload` inside the worker), so they pickle
 cleanly and hash stably.
+
+Compiled-trace sharing: a workload's lowered op columns depend only on
+(workload, total_bytes, wl_kwargs, capacity, base) — not on the policy /
+variant / manager axes — so `trace_key` derives a `TraceKey` per point and
+`run_sweep` groups pending points by it.  Each worker process receives
+whole groups and compiles each distinct trace once (into the in-process
+`repro.core.engine.TRACE_CACHE` LRU), replaying it across its group's
+points.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ import os
 from typing import Iterable, Sequence
 
 from repro.core.costmodel import CostParams, MI250X
+from repro.core.ranges import DEFAULT_BASE as BASE
 
 _CODE_DIGEST: str | None = None
 
@@ -107,36 +116,60 @@ class _ManagerMap:
 MANAGERS = _ManagerMap()
 
 
-def run_point(point: SweepPoint, params: CostParams = MI250X) -> dict:
-    """Execute one sweep point; returns the flat result row."""
-    from repro.core.ranges import AddressSpace
+def trace_key(point: SweepPoint, base: int = BASE,
+              max_ops: int | None = None) -> tuple:
+    """TraceKey: the fields that fully determine a point's lowered trace.
+
+    Policy / variant / manager / profile axes deliberately excluded —
+    points differing only in those replay one compiled trace."""
+    return (point.workload, int(point.total_bytes), point.wl_kwargs,
+            point.capacity, base, max_ops)
+
+
+def run_point(point: SweepPoint, params: CostParams = MI250X, *,
+              trace_cache=True) -> dict:
+    """Execute one sweep point; returns the flat result row.
+
+    ``trace_cache``: True (default) memoises the compiled trace in the
+    process-wide `repro.core.engine.TRACE_CACHE` under `trace_key(point)`;
+    pass a `TraceCache` to use a private cache, or False to recompile."""
     from repro.core.simulator import simulate
     from repro.core.traces import make_workload
 
-    wl_kwargs = dict(point.wl_kwargs)
+    cache = key = None
+    if trace_cache is not False and point.engine == "batched":
+        from repro.core.engine import TRACE_CACHE
+        cache = TRACE_CACHE if trace_cache is True else trace_cache
+        key = trace_key(point)
+    # strings pass through to simulate untupled: "biggest" resolves there
+    # off the same build used to run; any other string raises there
+    # (tuple() would silently split a bare name into characters)
     zero_copy = point.zero_copy
-    if zero_copy == "biggest":
-        probe = AddressSpace(point.capacity, base=175 * 1024 * 1024)
-        make_workload(point.workload, point.total_bytes,
-                      **wl_kwargs).build(probe)
-        zero_copy = (max(probe.allocations, key=lambda a: a.size).name,)
+    if not isinstance(zero_copy, str):
+        zero_copy = tuple(zero_copy)
     res = simulate(
-        make_workload(point.workload, point.total_bytes, **wl_kwargs),
+        make_workload(point.workload, point.total_bytes,
+                      **dict(point.wl_kwargs)),
         point.capacity,
+        base=BASE,
         policy=point.policy,
         params=params,
         profile=point.profile,
         engine=point.engine,
         manager_cls=MANAGERS[point.manager],
-        zero_copy_alloc_names=tuple(zero_copy),
+        zero_copy_alloc_names=zero_copy,
+        trace_cache=cache,
+        trace_key=key,
         **dict(point.mgr_kwargs),
     )
     return res.row()
 
 
-def _run_point_job(args: tuple) -> tuple[int, dict]:
-    idx, point, params = args
-    return idx, run_point(point, params)
+def _run_group_job(args: tuple) -> list[tuple[int, dict]]:
+    """Worker job: one TraceKey group — the trace is compiled once into
+    the worker's in-process LRU and replayed across the group's points."""
+    items, params = args
+    return [(i, run_point(p, params)) for i, p in items]
 
 
 def run_sweep(
@@ -155,7 +188,15 @@ def run_sweep(
     execution; a point that raises inside a worker propagates its own
     exception either way.  With ``cache_dir`` set, each point's row is
     cached on disk under its content key.  Pass a dict as ``stats`` to
-    receive {"cached": n, "computed": m}.
+    receive {"cached": n, "computed": m, "trace_groups": g}.
+
+    Scheduling is **grid-aware**: pending points are grouped by
+    `trace_key` and dispatched group-wise, so a worker compiles each
+    distinct trace once and replays it across that group's
+    policy/variant/manager points (serial execution walks the same
+    grouped order and shares through the in-process LRU likewise).
+    Groups larger than an even per-worker share are split so sharing
+    never reduces fan-out below the worker count.
     """
     points = list(points)
     rows: list[dict | None] = [None] * len(points)
@@ -175,9 +216,17 @@ def run_sweep(
             pending.append((i, p))
     else:
         pending = list(enumerate(points))
+
+    # group by TraceKey: one compile per distinct trace per worker
+    groups: dict[tuple, list[tuple[int, SweepPoint]]] = {}
+    for i, p in pending:
+        groups.setdefault(trace_key(p), []).append((i, p))
+    grouped = list(groups.values())
+
     if stats is not None:
         stats["cached"] = len(points) - len(pending)
         stats["computed"] = len(pending)
+        stats["trace_groups"] = len(grouped)
 
     if pending:
         results: list[tuple[int, dict]] | None = None
@@ -185,18 +234,26 @@ def run_sweep(
         if n_jobs and n_jobs > 1 and len(pending) > 1:
             from concurrent.futures import ProcessPoolExecutor
             from concurrent.futures.process import BrokenProcessPool
+            # split groups into dispatch units so trace sharing never caps
+            # parallelism below the worker count: a split group recompiles
+            # once per extra worker (milliseconds on the columnar tier) in
+            # exchange for full execution fan-out
+            per_unit = max(1, -(-len(pending) // n_jobs))
+            units = [g[k:k + per_unit] for g in grouped
+                     for k in range(0, len(g), per_unit)]
             pool = None
             try:
                 pool = ProcessPoolExecutor(
-                    max_workers=min(n_jobs, len(pending)))
+                    max_workers=min(n_jobs, len(units)))
             except (OSError, ImportError):
                 pool = None        # sandbox without fork/pipe support
             if pool is not None:
                 try:
                     with pool:
-                        results = list(pool.map(
-                            _run_point_job,
-                            [(i, p, params) for i, p in pending]))
+                        results = [r for chunk in pool.map(
+                            _run_group_job,
+                            [(u, params) for u in units])
+                            for r in chunk]
                 except BrokenProcessPool:
                     # workers died (OOM kill, hard crash); a point's own
                     # exception propagates unmodified instead
@@ -206,7 +263,8 @@ def run_sweep(
                           file=sys.stderr)
                     results = None
         if results is None:
-            results = [(i, run_point(p, params)) for i, p in pending]
+            results = [(i, run_point(p, params))
+                       for g in grouped for i, p in g]
         for i, row in results:
             rows[i] = row
             if cache_dir:

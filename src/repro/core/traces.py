@@ -1,7 +1,15 @@
 """Access-trace generators for the paper's workload suite (Table 2).
 
 Each workload lays out its managed allocations and yields a lazy op trace
-capturing the *access pattern class* the paper analyses:
+capturing the *access pattern class* the paper analyses.  Every workload
+additionally implements ``emit_columns(space)`` — the columnar compile
+tier: the engine's flat op columns are constructed directly with
+`np.repeat`/`np.tile`/`np.arange` over range-id arrays, op-for-op
+identical to lowering the ``trace()`` generator (which stays the golden
+reference; see tests/test_columnar_traces.py) but without materialising
+per-op tuples.
+
+The pattern classes:
 
   Category I   — STREAM, Conv2d, BFS: linear streaming, no (or algorithmic)
                  reuse → permanent evictions only.
@@ -30,6 +38,9 @@ from __future__ import annotations
 import math
 from typing import Iterator
 
+import numpy as np
+
+from repro.core.engine import ColumnEmitter, CompiledTrace
 from repro.core.ranges import AddressSpace, GB, MB
 from repro.core.simulator import Op, Workload
 
@@ -42,6 +53,33 @@ WAVE_RETRY_CAP = 400
 
 def _rids(space: AddressSpace, alloc) -> list[int]:
     return [r.rid for r in space.ranges_of(alloc)]
+
+
+def _rid_arr(space: AddressSpace, alloc) -> np.ndarray:
+    rs = space.ranges_of(alloc)   # rids are consecutive per allocation
+    return np.arange(rs[0].rid, rs[-1].rid + 1, dtype=np.int64)
+
+
+def _sizes(space: AddressSpace) -> np.ndarray:
+    return space.size_array()
+
+
+def _interleave(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """a[0], b[0], a[1], b[1], … with the longer array's tail appended —
+    the ``for i in range(max(la, lb)): if i < la … if i < lb …`` pattern."""
+    m = min(len(a), len(b))
+    out = np.empty(len(a) + len(b), dtype=np.int64)
+    out[0:2 * m:2] = a[:m]
+    out[1:2 * m:2] = b[:m]
+    out[2 * m:] = a[m:] if len(a) > m else b[m:]
+    return out
+
+
+def _multi_arange(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenation of ``arange(starts[i], starts[i] + lens[i])``."""
+    total = int(lens.sum())
+    cum = np.cumsum(lens) - lens
+    return np.repeat(starts - cum, lens) + np.arange(total)
 
 
 class Stream(Workload):
@@ -65,6 +103,17 @@ class Stream(Workload):
                 yield ("touch", rid, self.concurrency, 0)
             nbytes = sum(space.ranges[r].size for r in (rb[i], rc[i], ra[i]))
             yield ("compute", nbytes / HBM_BW)
+
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        em.kernel()
+        sz = _sizes(space)
+        ra, rb, rc = (_rid_arr(space, x) for x in (self.a, self.b, self.c))
+        n = min(len(ra), len(rb), len(rc))
+        ra, rb, rc = ra[:n], rb[:n], rc[:n]
+        em.rows(np.stack([rb, rc, ra], axis=1), self.concurrency,
+                (sz[rb] + sz[rc] + sz[ra]) / HBM_BW)
+        return em.finish()
 
 
 class Conv2d(Workload):
@@ -92,6 +141,19 @@ class Conv2d(Workload):
             nb = space.ranges[ri[i]].size + space.ranges[ro[i]].size
             yield ("compute", nb * self.FLOPS_PER_BYTE / PEAK_FLOPS
                    + nb / HBM_BW)
+
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        em.kernel()
+        em.touches(_rid_arr(space, self.wgt), self.concurrency)
+        sz = _sizes(space)
+        ri, ro = _rid_arr(space, self.inp), _rid_arr(space, self.out)
+        n = min(len(ri), len(ro))
+        ri, ro = ri[:n], ro[:n]
+        nb = sz[ri] + sz[ro]
+        em.rows(np.stack([ri, ro], axis=1), self.concurrency,
+                nb * self.FLOPS_PER_BYTE / PEAK_FLOPS + nb / HBM_BW)
+        return em.finish()
 
 
 class Jacobi2d(Workload):
@@ -139,6 +201,25 @@ class Jacobi2d(Workload):
                 nb = space.ranges[ra[i]].size + space.ranges[rb[i]].size
                 yield ("compute", nb * self.INTENSITY)
 
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        sz = _sizes(space)
+        ra, rb = _rid_arr(space, self.A), _rid_arr(space, self.B)
+        n = min(len(ra), len(rb))
+        ra, rb = ra[:n], rb[:n]
+        f = (sz[ra] + sz[rb]) * self.INTENSITY
+        k1 = np.stack([ra, rb], axis=1)
+        k2 = np.stack([rb, ra], axis=1)
+        for _ in range(self.ITERS):
+            em.kernel()
+            em.rows(k1, self.concurrency, f)
+            em.kernel()
+            if self.svm_aware:
+                em.rows(k2[::-1], self.concurrency, f[::-1])
+            else:
+                em.rows(k2, self.concurrency, f)
+        return em.finish()
+
     def work_units(self) -> float:
         return float(self.total_bytes * 2 * self.ITERS)
 
@@ -177,6 +258,24 @@ class BFS(Workload):
                 yield ("touch", rid, self.concurrency, lvl)
                 yield ("writeback", rid)
 
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        sz = _sizes(space)
+        re = _rid_arr(space, self.edges)
+        rn = _rid_arr(space, self.nodes)
+        rf = _rid_arr(space, self.front)
+        off = 0
+        for lvl, frac in enumerate(self.LEVEL_FRACS):
+            em.kernel()
+            win = max(1, int(len(re) * frac))
+            w_rids = re[(off + np.arange(win)) % len(re)]
+            em.touches(w_rids, self.concurrency, lvl)
+            off += win
+            em.touches(rn[::3], self.concurrency, lvl)
+            em.compute(int(sz[w_rids].sum()) * 2.0 / HBM_BW)
+            em.touch_writeback(rf, self.concurrency, lvl)
+        return em.finish()
+
     def work_units(self) -> float:
         return float(self.total_bytes * sum(self.LEVEL_FRACS))
 
@@ -207,8 +306,8 @@ class _GemmLike(Workload):
     def work_units(self) -> float:
         return 2.0 * float(self.n) ** 3
 
-    def _panel(self, rids: list[int], w: int, waves: int) -> list[int]:
-        """Contiguous range slice for wave w's row panel."""
+    def _panel(self, rids, w: int, waves: int):
+        """Contiguous range slice for wave w's row panel (list or array)."""
         lo = int(w * len(rids) / waves)
         hi = max(lo + 1, int((w + 1) * len(rids) / waves))
         return rids[lo:hi]
@@ -271,6 +370,68 @@ class Sgemm(_GemmLike):
                 yield ("touch", rid, self.concurrency, 0)
             yield ("compute", flops_per_wave / PEAK_FLOPS)
 
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        ra, rb, rc = (_rid_arr(space, x) for x in (self.A, self.B, self.C))
+        waves = self._waves()
+        cval = (self.work_units() / waves) / PEAK_FLOPS
+        conc = self.concurrency
+        em.kernel()
+        if self.svm_aware:
+            em.pins(rb)
+            em.kernel()
+            self._emit_aware_waves(em, ra, rc, waves, conc, cval)
+            return em.finish()
+        em.touches(_interleave(ra, rb), conc)
+        em.kernel()
+        la = len(ra)
+        for w in range(waves):
+            em.touches(self._panel(ra, w, waves), conc)
+            em.touches(rb, conc)
+            overflow = (self.A.size + self.B.size
+                        + self.C.size * (w + 1) / waves
+                        ) / space.capacity - 1.0
+            frac = min(1.0, max(0.0, 2.0 * overflow))
+            churn = int(frac * la)
+            if churn:
+                em.touches(ra[(w + np.arange(churn)) % la], conc)
+            em.touches(self._panel(rc, w, waves), conc)
+            em.compute(cval)
+        return em.finish()
+
+    def _emit_aware_waves(self, em: ColumnEmitter, ra, rc, waves, conc,
+                          cval) -> None:
+        """All svm-aware waves ([A panel, C panel, compute] each) as one
+        vectorised block.  Panel bounds replicate `_panel`'s float-division
+        truncation exactly (quotients are far from integers relative to
+        one ulp, so `astype(int64)` == `int()` op-for-op)."""
+        from repro.core.engine import OP_COMPUTE, OP_TOUCH
+
+        w = np.arange(waves)
+        la, lc = len(ra), len(rc)
+        lo_a = (w * la / waves).astype(np.int64)
+        hi_a = np.maximum(lo_a + 1, ((w + 1) * la / waves).astype(np.int64))
+        lo_c = (w * lc / waves).astype(np.int64)
+        hi_c = np.maximum(lo_c + 1, ((w + 1) * lc / waves).astype(np.int64))
+        len_a, len_c = hi_a - lo_a, hi_c - lo_c
+        per_wave = len_a + len_c + 1
+        n = int(per_wave.sum())
+        wave_off = np.cumsum(per_wave) - per_wave
+        a_pos = _multi_arange(wave_off, len_a)
+        c_pos = _multi_arange(wave_off + len_a, len_c)
+        comp_pos = wave_off + len_a + len_c
+        codes = np.full(n, OP_TOUCH, dtype=np.int8)
+        codes[comp_pos] = OP_COMPUTE
+        rids = np.empty(n, dtype=np.int64)
+        rids[a_pos] = ra[_multi_arange(lo_a, len_a)]
+        rids[c_pos] = rc[_multi_arange(lo_c, len_c)]
+        rids[comp_pos] = -1
+        concs = np.full(n, conc, dtype=np.int64)
+        concs[comp_pos] = 0
+        fargs = np.zeros(n)
+        fargs[comp_pos] = cval
+        em.raw(codes, rids, concs, np.zeros(n, dtype=np.int64), fargs)
+
 
 class Syr2k(_GemmLike):
     """C = α·A·Bᵀ + α·B·Aᵀ + C — both factors fully re-traversed per
@@ -300,6 +461,24 @@ class Syr2k(_GemmLike):
             for rid in self._panel(rc, w, waves):
                 yield ("touch", rid, self.concurrency, 0)
             yield ("compute", flops_per_wave / PEAK_FLOPS)
+
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        ra, rb, rc = (_rid_arr(space, x) for x in (self.A, self.B, self.C))
+        waves = self._waves()
+        cval = (2.0 * self.work_units() / waves) / PEAK_FLOPS
+        conc = self.concurrency
+        em.kernel()
+        em.touches(_interleave(ra, rb), conc)
+        em.kernel()
+        for w in range(waves):
+            em.touches(np.concatenate([self._panel(ra, w, waves),
+                                       self._panel(rb, w, waves)]), conc)
+            em.touches(ra, conc)
+            em.touches(rb, conc)
+            em.touches(self._panel(rc, w, waves), conc)
+            em.compute(cval)
+        return em.finish()
 
 
 def _wave_retries(ws_bytes: int, other_bytes: int, capacity: int) -> int:
@@ -351,6 +530,27 @@ class Mvt(Workload):
             yield ("compute",
                    2.0 * self.A.size / self.dtype_bytes / PEAK_FLOPS / waves)
 
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        conc = self.concurrency
+        for v in self.vecs:
+            em.touches(_rid_arr(space, v), conc)
+        ra = _rid_arr(space, self.A)
+        em.kernel()
+        em.touches(ra, conc)
+        em.compute(2.0 * self.A.size / self.dtype_bytes / PEAK_FLOPS)
+        em.kernel()
+        waves = max(1, math.ceil(self.n / self.WAVE_COLS))
+        other = sum(v.size for v in self.vecs)
+        retries = (self.retry_override if self.retry_override is not None
+                   else _wave_retries(self.A.size, other, space.capacity))
+        cval = 2.0 * self.A.size / self.dtype_bytes / PEAK_FLOPS / waves
+        tiled = np.tile(ra, retries)
+        for w in range(waves):
+            em.touches(tiled, conc, 1 + w)
+            em.compute(cval)
+        return em.finish()
+
     def work_units(self) -> float:
         return float(2 * self.A.size)
 
@@ -397,6 +597,26 @@ class Gesummv(Workload):
                     if i < len(rb):
                         yield ("touch", rb[i], self.concurrency, 1 + w)
             yield ("compute", flops / PEAK_FLOPS / waves)
+
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        conc = self.concurrency
+        for v in self.vecs:
+            em.touches(_rid_arr(space, v), conc)
+        em.kernel()
+        ra, rb = _rid_arr(space, self.A), _rid_arr(space, self.B)
+        waves = max(1, math.ceil(self.n / self.WAVE_ROWS))
+        ws = self.A.size + self.B.size
+        other = sum(v.size for v in self.vecs)
+        retries = (self.retry_override if self.retry_override is not None
+                   else _wave_retries(ws, other, space.capacity))
+        flops = 4.0 * ws / self.dtype_bytes
+        cval = flops / PEAK_FLOPS / waves
+        tiled = np.tile(_interleave(ra, rb), retries)
+        for w in range(waves):
+            em.touches(tiled, conc, 1 + w)
+            em.compute(cval)
+        return em.finish()
 
     def work_units(self) -> float:
         return float(self.A.size + self.B.size)

@@ -1,0 +1,277 @@
+"""Columnar trace tier + cross-point compiled-trace sharing.
+
+Golden contract #1: `Workload.emit_columns(space)` produces op-for-op
+identical columns to lowering the `trace()` generator through
+`compile_trace` — every array compared exactly (fargs bitwise) — for
+every Table-2 workload × DOS {78, 109, 147} × svm-aware/naive variant.
+
+Golden contract #2: a CompiledTrace cached under a `trace_key` and
+replayed across policy / variant / manager points yields byte-identical
+`summary()` and profile events to a fresh compile (and to the scalar op
+loop)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    SweepPoint,
+    TraceCache,
+    run_point,
+    run_sweep,
+    simulate,
+)
+from repro.core.engine import (
+    TRACE_CACHE,
+    compile_trace,
+    compile_workload,
+    execute_compiled,
+)
+from repro.core.ranges import AddressSpace
+from repro.core.simulator import Workload, apply_trace
+from repro.core.svm import SVMManager
+from repro.core.sweep import trace_key
+from repro.core.traces import make_workload
+
+CAP = 4 * GB
+DOS_POINTS = (78, 109, 147)
+POLICIES = ("lrf", "lru", "clock", "random")
+
+# every Table-2 workload, including the svm-aware rewrites
+TABLE2_VARIANTS = [
+    ("stream", {}),
+    ("conv2d", {}),
+    ("jacobi2d", {}),
+    ("jacobi2d", {"svm_aware": True}),
+    ("bfs", {}),
+    ("sgemm", {}),
+    ("sgemm", {"svm_aware": True}),
+    ("syr2k", {}),
+    ("syr2k", {"svm_aware": True}),
+    ("mvt", {}),
+    ("gesummv", {}),
+]
+
+COLUMNS = ("codes", "rids", "concs", "hints", "fargs", "boundaries",
+           "touch_pos_np", "touch_rid_np")
+
+
+def _build(name, kw, dos, alignment=None):
+    space = AddressSpace(CAP, base=175 * MB, alignment=alignment)
+    wl = make_workload(name, int(CAP * dos / 100), **kw)
+    wl.build(space)
+    return space, wl
+
+
+@pytest.mark.parametrize("name,kw", TABLE2_VARIANTS,
+                         ids=[n + ("-aware" if k else "")
+                              for n, k in TABLE2_VARIANTS])
+def test_emit_columns_identical_to_generator_lowering(name, kw):
+    for dos in DOS_POINTS:
+        space, wl = _build(name, kw, dos)
+        ct_gen = compile_trace(wl.trace(space))
+        ct_col = wl.emit_columns(space)
+        for f in COLUMNS:
+            a, b = getattr(ct_gen, f), getattr(ct_col, f)
+            assert a.dtype == b.dtype, (dos, f)
+            assert np.array_equal(a, b), (dos, f)
+        assert ct_gen.touch_pos == ct_col.touch_pos
+        assert ct_gen.touch_rid == ct_col.touch_rid
+        assert ct_gen.n_ops == ct_col.n_ops
+
+
+def test_emit_columns_identical_on_fine_grained_ranges():
+    """Many-range spaces (the microbenchmark shape) stay exact."""
+    for name, kw in (("stream", {}), ("bfs", {}), ("sgemm", {})):
+        space, wl = _build(name, kw, 147, alignment=8 * MB)
+        ct_gen = compile_trace(wl.trace(space))
+        ct_col = wl.emit_columns(space)
+        for f in COLUMNS:
+            assert np.array_equal(getattr(ct_gen, f), getattr(ct_col, f))
+
+
+def test_compile_workload_dispatches_to_columnar():
+    space, wl = _build("stream", {}, 125)
+    calls = []
+    orig = wl.emit_columns
+
+    def spy(sp):
+        calls.append(sp)
+        return orig(sp)
+
+    wl.emit_columns = spy
+    ct = compile_workload(wl, space)
+    assert calls == [space]
+    assert np.array_equal(ct.codes, compile_trace(wl.trace(space)).codes)
+
+
+def test_compile_workload_generator_fallbacks():
+    # max_ops truncation counts kernel markers op-for-op: generator path
+    space, wl = _build("stream", {}, 147)
+    ct = compile_workload(wl, space, max_ops=17)
+    assert np.array_equal(
+        ct.codes, compile_trace(wl.trace(space), max_ops=17).codes)
+
+    # custom workloads without emit_columns lower the generator
+    class Custom(Workload):
+        def build(self, sp):
+            self.a = sp.alloc(self.total_bytes, "a")
+
+        def trace(self, sp):
+            for r in sp.ranges_of(self.a):
+                yield ("touch", r.rid, 8, 0)
+
+    space2 = AddressSpace(CAP, base=175 * MB)
+    cwl = Custom(GB)
+    cwl.build(space2)
+    ct2 = compile_workload(cwl, space2)
+    assert len(ct2) == len(space2.ranges_of(cwl.a))
+
+
+def test_compiled_trace_frozen_and_copy():
+    space, wl = _build("jacobi2d", {}, 109)
+    ct = compile_workload(wl, space)
+    with pytest.raises(ValueError):
+        ct.rids[0] = 99
+    cp = ct.copy()
+    assert cp.rids is ct.rids            # columns shared
+    assert cp.span_cache is not ct.span_cache
+    mgr = SVMManager(space, profile=False)
+    execute_compiled(cp, mgr)            # copy is executable
+    assert mgr.n_migrations > 0
+
+
+def test_trace_cache_lru_semantics():
+    cache = TraceCache(maxsize=2)
+    space, wl = _build("stream", {}, 109)
+    ct = compile_workload(wl, space, cache=cache, key="k1")
+    assert cache.misses == 1 and len(cache) == 1
+    assert compile_workload(wl, space, cache=cache, key="k1") is ct
+    assert cache.hits == 1
+    compile_workload(wl, space, cache=cache, key="k2")
+    cache.get("k1")                      # refresh k1, k2 becomes LRU
+    compile_workload(wl, space, cache=cache, key="k3")
+    assert len(cache) == 2
+    assert cache.get("k2") is None       # evicted
+    assert cache.get("k1") is not None
+
+
+def test_trace_key_shares_across_policy_variant_manager_axes():
+    def pt(**kw):
+        return SweepPoint.make("jacobi2d", int(CAP * 1.09), CAP, **kw)
+
+    keys = {trace_key(pt()),
+            trace_key(pt(policy="lru")),
+            trace_key(pt(mgr_kwargs={"previct_watermark": 0.1})),
+            trace_key(pt(manager="uvm")),
+            trace_key(pt(zero_copy="biggest"))}
+    assert len(keys) == 1
+    assert trace_key(pt()) != trace_key(
+        SweepPoint.make("jacobi2d", int(CAP * 1.25), CAP))
+    assert trace_key(pt()) != trace_key(
+        SweepPoint.make("jacobi2d", int(CAP * 1.09), CAP,
+                        wl_kwargs={"svm_aware": True}))
+
+
+def test_cached_trace_reuse_byte_identical_across_policies():
+    """One cached CompiledTrace replayed across policies and fresh spaces
+    == fresh compiles == the scalar op loop (summary AND events)."""
+    cache = TraceCache()
+    key = ("jacobi2d", int(CAP * 1.09), (), CAP, 175 * MB, None)
+    for policy in POLICIES:
+        space, wl = _build("jacobi2d", {}, 109)
+        ct = compile_workload(wl, space, cache=cache, key=key)
+        mgr = SVMManager(space, policy=policy, profile=True)
+        execute_compiled(ct, mgr)
+
+        space_f, wl_f = _build("jacobi2d", {}, 109)
+        mgr_f = SVMManager(space_f, policy=policy, profile=True)
+        execute_compiled(compile_workload(wl_f, space_f), mgr_f)
+
+        space_s, wl_s = _build("jacobi2d", {}, 109)
+        mgr_s = SVMManager(space_s, policy=policy, profile=True)
+        apply_trace(mgr_s, wl_s.trace(space_s))
+
+        assert mgr.summary() == mgr_f.summary() == mgr_s.summary()
+        assert mgr.events == mgr_f.events == mgr_s.events
+        assert mgr.resident == mgr_f.resident == mgr_s.resident
+        assert mgr.free == mgr_f.free == mgr_s.free
+    assert cache.misses == 1 and cache.hits == len(POLICIES) - 1
+
+
+def test_run_sweep_grouped_rows_match_uncached_run_point():
+    pts = [SweepPoint(workload="stream", total_bytes=int(CAP * 1.25),
+                      capacity=CAP, policy=p) for p in POLICIES]
+    pts.append(SweepPoint(workload="stream", total_bytes=int(CAP * 1.25),
+                          capacity=CAP, manager="uvm"))
+    TRACE_CACHE.clear()
+    stats = {}
+    grouped = run_sweep(pts, jobs=0, stats=stats)
+    assert stats["trace_groups"] == 1
+    fresh = [run_point(p, trace_cache=False) for p in pts]
+    assert grouped == fresh
+    assert TRACE_CACHE.hits >= len(pts) - 1
+
+
+def test_raw_single_block_does_not_freeze_caller_arrays():
+    from repro.core import ColumnEmitter
+    from repro.core.engine import OP_TOUCH
+
+    n = 8
+    codes = np.full(n, OP_TOUCH, dtype=np.int8)
+    rids = np.arange(n, dtype=np.int64)
+    concs = np.full(n, 4, dtype=np.int64)
+    hints = np.zeros(n, dtype=np.int64)
+    fargs = np.zeros(n)
+    em = ColumnEmitter()
+    em.raw(codes, rids, concs, hints, fargs)
+    ct = em.finish()
+    rids[0] = 99                      # caller's array stays writable...
+    assert ct.rids[0] == 0            # ...and the trace is unaffected
+    with pytest.raises(ValueError):
+        ct.rids[0] = 1                # the trace itself is frozen
+
+    # same for a single touches() block
+    user = np.arange(5, dtype=np.int64)
+    em2 = ColumnEmitter()
+    em2.touches(user, 4)
+    ct2 = em2.finish()
+    user[0] = 77
+    assert ct2.touch_rid_np[0] == 0
+
+
+def test_simulate_rejects_bare_string_zero_copy():
+    with pytest.raises(ValueError, match="biggest"):
+        simulate(make_workload("gesummv", int(CAP * 1.25)), CAP,
+                 profile=False, zero_copy_alloc_names="A")
+    # a sweep point with a bare name must raise too, not char-split it
+    with pytest.raises(ValueError, match="biggest"):
+        run_point(SweepPoint(workload="gesummv",
+                             total_bytes=int(CAP * 1.25), capacity=CAP,
+                             zero_copy="v0"))
+
+
+def test_parallel_sweep_splits_large_groups():
+    """All points share one TraceKey; parallel rows must still match."""
+    pts = [SweepPoint(workload="stream", total_bytes=int(CAP * 1.09),
+                      capacity=CAP, policy=p, mgr_kwargs=mk)
+           for p in POLICIES
+           for mk in ((), (("previct_watermark", 0.1),))]
+    serial = run_sweep(pts, jobs=0)
+    parallel = run_sweep(pts, jobs=4)
+    assert serial == parallel
+
+
+def test_zero_copy_biggest_resolves_from_simulation_build():
+    row = run_point(SweepPoint(workload="gesummv",
+                               total_bytes=int(CAP * 1.25), capacity=CAP,
+                               zero_copy="biggest"))
+    direct = simulate(make_workload("gesummv", int(CAP * 1.25)), CAP,
+                      profile=False, zero_copy_alloc_names=("A",)).row()
+    assert row == direct
+    # sentinel also accepted by simulate directly, off the same build
+    via_sim = simulate(make_workload("gesummv", int(CAP * 1.25)), CAP,
+                       profile=False,
+                       zero_copy_alloc_names="biggest").row()
+    assert via_sim == direct
