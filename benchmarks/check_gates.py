@@ -18,6 +18,7 @@ FLOORS = {
     "gate_stream147_speedup": 10.0,     # batched vs scalar, stream DOS-147
     "gate_variant_min_speedup": 5.0,    # §4.2 variant / UVM rows
     "gate_compile_min_speedup": 5.0,    # columnar vs generator lowering
+    "gate_serving_decode_speedup": 5.0,  # session decode replay vs scalar
 }
 
 

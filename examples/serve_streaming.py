@@ -3,6 +3,11 @@ streaming with batched decode requests, comparing the paper-faithful
 demand-paging baseline against SVM-aware serving (pinning + overlapped
 prefetch) and policy alternatives.
 
+The executor runs on the compiled-session runtime: each decode step's
+layer-fetch trace is recorded and compiled once (first token) and
+replayed as cached op-column segments every later token — the per-row
+session column shows compiled segments vs cached replays.
+
     PYTHONPATH=src python examples/serve_streaming.py
 """
 
@@ -63,7 +68,9 @@ def main() -> None:
         rows.append((label, m))
         print(f"  {label:22s} wall={m['wall_s']*1e3:8.2f}ms "
               f"migs={m['migrations']:4d} evicts={m['evictions']:4d} "
-              f"e2m={m['evict_to_mig']:.2f}")
+              f"e2m={m['evict_to_mig']:.2f} "
+              f"session={m['segment_cache_misses']}c/"
+              f"{m['segment_cache_hits']}r")
 
     base = rows[0][1]["wall_s"]
     best = min(rows, key=lambda r: r[1]["wall_s"])

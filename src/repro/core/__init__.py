@@ -28,6 +28,7 @@ from repro.core.engine import (
     ColumnEmitter,
     CompiledTrace,
     TraceCache,
+    TraceSession,
     compile_trace,
     compile_workload,
     compiled_from_columns,
@@ -50,6 +51,7 @@ __all__ = [
     "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
     "WORKLOADS", "make_workload",
     "CompiledTrace", "compile_trace", "compile_workload", "execute_compiled",
-    "ColumnEmitter", "TraceCache", "TRACE_CACHE", "compiled_from_columns",
+    "ColumnEmitter", "TraceCache", "TraceSession", "TRACE_CACHE",
+    "compiled_from_columns",
     "SweepPoint", "run_point", "run_sweep", "trace_key",
 ]

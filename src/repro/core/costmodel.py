@@ -58,6 +58,9 @@ class CostParams:
     # zero-copy remote access latency per cacheline-batch (s) and batch bytes
     zerocopy_lat: float = 1.5e-6
     zerocopy_batch: int = 4096
+    # achievable serving compute rate (flops/s) for the streaming runtime:
+    # peak bf16 derated to a realistic decode utilisation
+    serve_flops: float = 197e12 * 0.4
 
     def copy_time(self, nbytes: int) -> float:
         return nbytes / self.link_bw

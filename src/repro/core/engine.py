@@ -41,8 +41,13 @@ them with a batched interpreter:
   * `UVMManager` runs on its own batched interpreter
     (`repro.core.engine_uvm`): the same `execute_compiled` entry point
     dispatches on manager type.  Unknown manager types replay op-for-op.
-  * Boundary ops (writeback / pin / unpin) drop to the scalar manager
-    path, op for op.
+  * Boundary ops (writeback / pin / unpin / spill) drop to the scalar
+    manager path, op for op.
+  * The runtime layer (streaming executor, activation offload, serving
+    launcher) drives the engine through `TraceSession`: ops are recorded
+    incrementally into the same columns, compiled in segments, and
+    replayed against *resumable* manager state — a decode loop compiles
+    its per-token trace once and replays it every token.
 
 Equivalence guarantee: for any trace and any manager configuration,
 executing the compiled trace leaves the manager with the same `summary()`,
@@ -85,6 +90,10 @@ OP_COMPUTE = 1
 OP_WRITEBACK = 2
 OP_PIN = 3
 OP_UNPIN = 4
+# spill-until-free boundary op (runtime layer): drain policy victims via
+# `SVMManager.spill_oldest(overlap=farg)` until `free >= hint` bytes —
+# the eager-spill loop of the activation-offload scheduler, as an op
+OP_SPILL = 5
 
 # spans shorter than this run through the scalar manager path: the NumPy
 # batch setup would cost more than it saves
@@ -233,6 +242,12 @@ def compile_trace(trace: Iterable, max_ops: int | None = None) -> CompiledTrace:
             concs.append(0)
             hints.append(0)
             fargs.append(0.0)
+        elif tag == "spill":
+            codes.append(OP_SPILL)
+            rids.append(-1)
+            concs.append(0)
+            hints.append(op[1])        # bytes that must become free
+            fargs.append(op[2])        # overlap fraction
         else:
             raise ValueError(f"unknown trace op {tag!r}")
     return compiled_from_columns(
@@ -494,6 +509,206 @@ def _compile_uncached(workload, space, max_ops, columnar) -> CompiledTrace:
     return compile_trace(workload.trace(space), max_ops=max_ops)
 
 
+# ------------------------------------------------------------- trace session
+
+class TraceSession:
+    """Record → compile → replay API for the runtime layer.
+
+    Where `compile_workload` lowers a *complete* trace up front, a session
+    records ops **incrementally** into the flat `OP_*` columns, compiles
+    them into frozen `CompiledTrace` *segments*, and replays each segment
+    against the live manager.  The manager's residency, policy queues,
+    ledgers, and clock carry across segment replays — executing segments
+    back-to-back is bit-identical to executing their concatenation (every
+    accumulator fold is seeded from the manager's current value) — so a
+    replay *resumes* where the previous one stopped.
+
+    Segments sealed under a key land in a per-session LRU, which is what
+    makes a decode loop cheap: the per-token layer-fetch trace records and
+    compiles **once** (first token) and replays as a compiled segment every
+    later token (`run`; hits/misses counted).
+
+    ``scalar=True`` replays segments op-for-op through the manager's own
+    `touch`/`advance`/… methods (`_replay`) instead of the batched
+    interpreter — the imperative reference path, used by the golden
+    equivalence tests.  Both modes execute the *same* recorded op sequence,
+    and the engine's equivalence guarantee makes their `summary()` output
+    byte-identical.
+
+    Op vocabulary = `apply_trace`'s, plus ``spill(need_bytes, overlap)``
+    (`OP_SPILL`): drain `spill_oldest(overlap=…)` victims until ``free >=
+    need_bytes`` — the runtime layer's eager-spill loop as an op.  `OP_SPILL`
+    is SVM-only (the UVM interpreter rejects it).
+    """
+
+    def __init__(self, mgr, *, scalar: bool = False, cache_size: int = 64):
+        self.mgr = mgr
+        self.scalar = scalar
+        self.cache_size = cache_size
+        self._codes: list[int] = []
+        self._rids: list[int] = []
+        self._concs: list[int] = []
+        self._hints: list[int] = []
+        self._fargs: list[float] = []
+        self._n_src = 0
+        self._segments: "OrderedDict[object, CompiledTrace]" = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.segments_sealed = 0
+        self.segments_replayed = 0
+        self.ops_recorded = 0
+        self.ops_replayed = 0
+
+    # ------------------------------------------------------------ recording
+
+    @property
+    def pending(self) -> int:
+        """Ops recorded but not yet sealed into a segment."""
+        return len(self._codes)
+
+    def _op(self, code: int, rid: int, conc: int, hint: int,
+            farg: float) -> None:
+        self._codes.append(code)
+        self._rids.append(rid)
+        self._concs.append(conc)
+        self._hints.append(hint)
+        self._fargs.append(farg)
+        self._n_src += 1
+        self.ops_recorded += 1
+
+    def touch(self, rid: int, *, concurrency: int = 32,
+              page_hint: int = 0) -> None:
+        self._op(OP_TOUCH, rid, concurrency, page_hint or 0, 0.0)
+
+    def compute(self, seconds: float) -> None:
+        self._op(OP_COMPUTE, -1, 0, 0, seconds)
+
+    def writeback(self, rid: int) -> None:
+        self._op(OP_WRITEBACK, rid, 0, 0, 0.0)
+
+    def pin(self, rid: int) -> None:
+        self._op(OP_PIN, rid, 0, 0, 0.0)
+
+    def unpin(self, rid: int) -> None:
+        self._op(OP_UNPIN, rid, 0, 0, 0.0)
+
+    def spill(self, need_bytes: int, *, overlap: float = 0.0) -> None:
+        """Record an eager-spill boundary: at replay, policy victims are
+        pre-evicted (`spill_oldest(overlap=…)`) until ``free >=
+        need_bytes`` or nothing is evictable."""
+        self._op(OP_SPILL, -1, 0, int(need_bytes), overlap)
+
+    def kernel(self) -> None:
+        """Kernel-boundary marker: consumed, not materialised (matches
+        `compile_trace`), but counted toward the segment's ``n_ops``."""
+        self._n_src += 1
+
+    def record(self, ops: Iterable) -> None:
+        """Record a batch of `apply_trace`-vocabulary op tuples."""
+        for op in ops:
+            tag = op[0]
+            if tag == "touch":
+                self.touch(op[1], concurrency=op[2], page_hint=op[3])
+            elif tag == "compute":
+                self.compute(op[1])
+            elif tag == "kernel":
+                self.kernel()
+            elif tag == "writeback":
+                self.writeback(op[1])
+            elif tag == "pin":
+                self.pin(op[1])
+            elif tag == "unpin":
+                self.unpin(op[1])
+            elif tag == "spill":
+                self.spill(op[1], overlap=op[2])
+            else:
+                raise ValueError(f"unknown trace op {tag!r}")
+
+    # ------------------------------------------------------ compile / replay
+
+    def seal(self, key=None) -> CompiledTrace:
+        """Compile the pending ops into a frozen segment (and clear the
+        recording buffer).  With ``key`` the segment enters the session's
+        LRU for later `run`/`get` replays."""
+        ct = compiled_from_columns(
+            np.array(self._codes, dtype=np.int8),
+            np.array(self._rids, dtype=np.int64),
+            np.array(self._concs, dtype=np.int64),
+            np.array(self._hints, dtype=np.int64),
+            np.array(self._fargs, dtype=np.float64),
+            self._n_src,
+        )
+        self._codes = []
+        self._rids = []
+        self._concs = []
+        self._hints = []
+        self._fargs = []
+        self._n_src = 0
+        self.segments_sealed += 1
+        if key is not None:
+            self._segments[key] = ct
+            self._segments.move_to_end(key)
+            while len(self._segments) > self.cache_size:
+                self._segments.popitem(last=False)
+        return ct
+
+    def get(self, key) -> CompiledTrace | None:
+        """Cached segment for ``key`` (LRU-refreshed), or None."""
+        ct = self._segments.get(key)
+        if ct is not None:
+            self._segments.move_to_end(key)
+        return ct
+
+    def replay(self, ct: CompiledTrace) -> None:
+        """Execute one compiled segment against the manager, resuming from
+        its current state."""
+        if self.scalar:
+            _replay(ct, self.mgr, 0, len(ct))
+        else:
+            execute_compiled(ct, self.mgr)
+        self.segments_replayed += 1
+        self.ops_replayed += len(ct)
+
+    def flush(self, key=None) -> CompiledTrace | None:
+        """Seal the pending ops and replay them immediately.  Returns the
+        segment (cached under ``key`` if given), or None when nothing was
+        pending."""
+        if not self._codes and self._n_src == 0:
+            return None
+        ct = self.seal(key)
+        self.replay(ct)
+        return ct
+
+    def run(self, key, record_fn) -> CompiledTrace:
+        """The decode-loop primitive: replay the compiled segment cached
+        under ``key``, or — on the first encounter — record it via
+        ``record_fn(session)``, seal, cache, and replay.  Requires an empty
+        recording buffer (a cached replay cannot absorb pending ops)."""
+        if self._codes or self._n_src:   # incl. pending kernel markers
+            raise RuntimeError(
+                f"TraceSession.run({key!r}): {self.pending} recorded "
+                "ops pending; flush() them before running a segment")
+        ct = self.get(key)
+        if ct is None:
+            self.cache_misses += 1
+            record_fn(self)
+            ct = self.seal(key)
+        else:
+            self.cache_hits += 1
+        self.replay(ct)
+        return ct
+
+    def stats(self) -> dict:
+        return {
+            "segments_sealed": self.segments_sealed,
+            "segments_replayed": self.segments_replayed,
+            "segment_cache_hits": self.cache_hits,
+            "segment_cache_misses": self.cache_misses,
+            "ops_recorded": self.ops_recorded,
+            "ops_replayed": self.ops_replayed,
+        }
+
+
 # --------------------------------------------------------------- cost tables
 
 # per-AddressSpace static tables, shared by every execution over that space
@@ -619,6 +834,12 @@ def _exec_boundary(ct: CompiledTrace, mgr, k: int) -> None:
         mgr.pin(rid)
     elif code == OP_UNPIN:
         mgr.unpin(rid)
+    elif code == OP_SPILL:
+        need = int(ct.hints[k])
+        overlap = float(ct.fargs[k])
+        while mgr.free < need and mgr.spill_oldest(overlap=overlap) \
+                is not None:
+            pass
 
 
 def _replay(ct: CompiledTrace, mgr, s: int, e: int) -> None:

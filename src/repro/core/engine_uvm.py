@@ -171,7 +171,7 @@ def execute_compiled_uvm(ct, mgr: UVMManager) -> None:
                 st.pinned[bl] = True
                 st.res[bl] = False       # memory accounting unchanged
                 st.n_pinned = int(st.pinned.sum())
-            else:                        # OP_UNPIN
+            elif c == OP_UNPIN:
                 bl = st.blocks[rids[k]]
                 sel = st.pinned[bl]
                 if sel.any():
@@ -187,6 +187,11 @@ def execute_compiled_uvm(ct, mgr: UVMManager) -> None:
                                               st.counter + len(newly))
                     st.counter += len(newly)
                     st.time[ub] = st.wall
+            else:
+                # OP_SPILL (eager pre-eviction) is an SVM policy concept;
+                # the UVM baseline has no range-level spill API
+                raise ValueError(
+                    f"opcode {c} unsupported on the UVM interpreter")
     finally:
         # flush array state back even on a mid-trace device-full error so
         # the manager is left in the same partial state as the scalar path

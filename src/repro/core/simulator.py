@@ -10,6 +10,7 @@ Op vocabulary (tuples, for speed):
   ("compute", seconds)                    — pure device compute
   ("writeback", rid)                      — algorithmic device→host copy
   ("pin", rid) / ("unpin", rid)           — app-directed placement (§4.1)
+  ("spill", need_bytes, overlap)          — eager-spill until free >= need
   ("kernel", name)                        — kernel-boundary marker
 """
 
@@ -153,6 +154,10 @@ def apply_trace(mgr: SVMManager, trace: Iterable[Op],
             mgr.pin(op[1])
         elif tag == "unpin":
             mgr.unpin(op[1])
+        elif tag == "spill":
+            while mgr.free < op[1] and \
+                    mgr.spill_oldest(overlap=op[2]) is not None:
+                pass
         elif tag == "kernel":
             pass
         else:

@@ -11,19 +11,24 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    # older jax: no AxisType enum / axis_types kwarg
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU tests/examples (same axis names)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

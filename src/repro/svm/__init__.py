@@ -3,8 +3,14 @@ oversubscribed serving (weight streaming) and training (activation
 offload), driven by the paper's range/fault/eviction model."""
 
 from repro.svm.planner import ParamRanges, plan_param_ranges
-from repro.svm.executor import StreamingExecutor
-from repro.svm.offload import OffloadPlan, plan_offload, simulate_offload
+from repro.svm.executor import StreamingExecutor, run_layer_stream
+from repro.svm.offload import (
+    OffloadPlan,
+    plan_offload,
+    record_offload,
+    simulate_offload,
+)
 
 __all__ = ["plan_param_ranges", "ParamRanges", "StreamingExecutor",
-           "OffloadPlan", "plan_offload", "simulate_offload"]
+           "run_layer_stream", "OffloadPlan", "plan_offload",
+           "record_offload", "simulate_offload"]

@@ -17,32 +17,39 @@ Streaming modes map the paper's findings onto serving:
   * zero_copy    — leave designated cold leaves host-resident at remote-
                    access cost (paper §4.2).
 
+The executor never drives the manager's `touch`/`advance`/`pin` methods
+directly: every access is **recorded** into a `repro.core.engine.
+TraceSession`, compiled into op-column segments, and **replayed** on the
+batched engine (`scalar=True` replays the same segments op-for-op — the
+imperative reference path, byte-identical by the engine's equivalence
+guarantee).  `decode_step` is the serving hot path: the whole token's
+layer-fetch trace seals into cached segments on the first token and
+replays as compiled columns every later token (the session counts the
+cache hits), which is what moves serving onto the ≥5x fast tier.
+
 Device-pool invalidation is push-based: the executor registers an eviction
 listener on the `SVMManager`, and evicted rids map back to their leaf via
 the plan's rid→leaf reverse index.  Each fetch therefore does O(ranges of
-the fetched leaf + leaves actually evicted since the last drain) work —
-the old implementation rescanned every leaf's full range list after every
-fetch, which is O(leaves × ranges) per decode step.  Hidden prefetch
-overlap is tracked in a separate ``overlap_hidden_s`` ledger (subtracted
-in `metrics()`), never by rewinding the manager's wall clock, so recorded
-`Event.t` timestamps stay monotonic.
+the fetched leaf + leaves actually evicted since the last drain) work.
+Hidden prefetch overlap is tracked in a separate ``overlap_hidden_s``
+ledger (subtracted in `metrics()`), never by rewinding the manager's wall
+clock, so recorded `Event.t` timestamps stay monotonic.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
+from repro.core.engine import TraceSession
 from repro.svm.planner import ParamRanges, plan_param_ranges
 
 PyTree = Any
-
-PEAK_FLOPS = 197e12 * 0.4     # assumed achievable serving compute rate
 
 
 class StreamingExecutor:
@@ -53,25 +60,40 @@ class StreamingExecutor:
                  prefetch: bool = False,
                  pin: tuple[str, ...] = (),
                  zero_copy: tuple[str, ...] = (),
-                 concurrency: int = 64):
+                 concurrency: int = 64,
+                 compute_rate: float | None = None,
+                 profile: bool = True,
+                 scalar: bool = False):
         self.host_params = jax.tree.map(np.asarray, params)
         self.plan: ParamRanges = plan_param_ranges(params, hbm_budget)
+        # profile=False for long-lived serving loops: per-event
+        # Event/DensitySample records grow without bound, one per
+        # migration/eviction per token
         self.mgr = self.plan.manager(policy=policy, params=cost_params,
-                                     parallel_evict=parallel_evict)
+                                     parallel_evict=parallel_evict,
+                                     profile=profile)
+        # serving compute rate: from the cost model unless overridden
+        self.compute_rate = (compute_rate if compute_rate is not None
+                             else cost_params.serve_flops)
         self.prefetch = prefetch
         self.concurrency = concurrency
+        # every manager access goes through the session: record -> compile
+        # segments -> replay (batched engine, or op-for-op when scalar).
+        # LRU sized to hold several whole decode steps: prefetch mode keys
+        # ~2 segments per leaf per token, and an undersized cache would
+        # recompile every token instead of replaying
+        self.session = TraceSession(
+            self.mgr, scalar=scalar,
+            cache_size=max(64, 4 * len(self.plan.leaf_ranges)))
         self._device: dict[str, jnp.ndarray] = {}
         self._flat = dict(self._leaves(self.host_params))
+        self._zc_leaves: set[str] = set()
         for pat in zero_copy:
             for path, rids in self.plan.leaf_ranges.items():
                 if pat in path:
                     aid = self.plan.space.ranges[rids[0]].alloc_id
                     self.mgr.set_zero_copy(aid)
-        for pat in pin:
-            for path, rids in self.plan.leaf_ranges.items():
-                if pat in path:
-                    for rid in rids:
-                        self.mgr.pin(rid)
+                    self._zc_leaves.add(path)
         # compute-time ledger (simulated clock shares the SVM manager wall)
         self.compute_flops = 0.0
         # prefetch hidden behind compute: separate ledger, never a wall
@@ -86,6 +108,16 @@ class StreamingExecutor:
         # (range touches + evicted-leaf drops); regression-tested to be
         # O(ranges of fetched leaf + actual evictions), not O(all leaves)
         self.fetch_scan_work = 0
+        self._step_scan: dict = {}   # step key -> demand-fetch scan units
+        # app-directed placement rides the session too (OP_PIN boundary
+        # ops migrate-then-pin exactly like the scalar mgr.pin path)
+        pinned = [rid for pat in pin
+                  for path, rids in self.plan.leaf_ranges.items()
+                  if pat in path for rid in rids]
+        if pinned:
+            for rid in pinned:
+                self.session.pin(rid)
+            self.session.flush(("setup_pin", tuple(pinned)))
 
     @staticmethod
     def _leaves(tree: PyTree):
@@ -96,18 +128,32 @@ class StreamingExecutor:
 
     # ----------------------------------------------------------- fetching
 
+    def _record_leaf(self, path: str) -> None:
+        for rid in self.plan.leaf_ranges[path]:
+            self.session.touch(rid, concurrency=self.concurrency)
+
+    def _leaf_resident(self, path: str) -> bool:
+        """Would a fetch of this leaf hit?  Zero-copy leaves always do;
+        managed leaves hit iff every range is resident (no touch can then
+        migrate or evict, so pre- and per-touch residency coincide)."""
+        if path in self._zc_leaves:
+            return True
+        resident = self.mgr.resident
+        return all(rid in resident for rid in self.plan.leaf_ranges[path])
+
     def fetch(self, path: str) -> jnp.ndarray:
         """Touch a leaf's ranges (demand paging) and return the tensor.
 
         Any leaves staged in the prefetch buffer are issued first (their
         migration cost was overlappable with the *previous* layer's
-        compute window), so this fetch usually hits."""
+        compute window), so this fetch usually hits.  The touches replay
+        as a cached compiled segment (one compile per leaf per session).
+        """
         if self._prefetch_q:
             self.drain_prefetch()
-        resident_before = True
-        for rid in self.plan.leaf_ranges[path]:
-            hit = self.mgr.touch(rid, concurrency=self.concurrency)
-            resident_before &= hit
+        resident_before = self._leaf_resident(path)
+        self.session.run(("fetch", path),
+                         lambda s: self._record_leaf(path))
         self.fetch_scan_work += len(self.plan.leaf_ranges[path])
         if not resident_before or path not in self._device:
             tensor = self._device[path] = jnp.asarray(self._flat[path])
@@ -124,8 +170,8 @@ class StreamingExecutor:
         (paper §4.2 'parallel implementation'): up to `overlap_s` of the
         migration cost is hidden (ledgered, not rewound)."""
         w0 = self.mgr.wall
-        for rid in self.plan.leaf_ranges[path]:
-            self.mgr.touch(rid, concurrency=self.concurrency)
+        self.session.run(("fetch", path),
+                         lambda s: self._record_leaf(path))
         self.overlap_hidden_s += min(self.mgr.wall - w0, overlap_s)
         self._drain_evictions()
 
@@ -145,16 +191,94 @@ class StreamingExecutor:
     def _drain_evictions(self) -> None:
         """Drop device tensors for leaves whose ranges were evicted since
         the last drain — pushed by the manager, O(#evictions)."""
+        pending = self._pending_evictions
+        if not pending:
+            return
         rid_to_leaf = self.plan.rid_to_leaf
-        while self._pending_evictions:
-            rid = self._pending_evictions.popleft()
+        device = self._device
+        for rid in pending:
             leaf = rid_to_leaf.get(rid)
-            if leaf is not None and self._device.pop(leaf, None) is not None:
+            if leaf is not None and device.pop(leaf, None) is not None:
                 self.fetch_scan_work += 1
+        pending.clear()
 
     def charge_compute(self, flops: float) -> None:
         self.compute_flops += flops
-        self.mgr.advance(flops / PEAK_FLOPS)
+        seconds = flops / self.compute_rate
+        self.session.run(("compute", seconds),
+                         lambda s: s.compute(seconds))
+
+    def tensor(self, path: str) -> jnp.ndarray:
+        """The leaf's tensor for compute: the cached device copy when the
+        pool holds it, else a fresh host materialisation (values are
+        identical either way — the pool is a placement model)."""
+        t = self._device.get(path)
+        return t if t is not None else jnp.asarray(self._flat[path])
+
+    # --------------------------------------------------- decode hot path
+
+    def decode_step(self, layer_paths: Sequence[Sequence[str]],
+                    flops: Sequence[float], *,
+                    materialize: bool = True) -> None:
+        """Replay one decode step's layer-fetch trace as compiled segments.
+
+        Emits exactly the op sequence the imperative per-fetch path
+        produces — per layer: staged prefetch touches (with their
+        per-leaf hidden-overlap ledger), demand touches, one compute op —
+        but sealed into session segments: the first token records and
+        compiles them, every later token replays the cached columns
+        (`session.cache_hits` counts the reuse).  Without prefetch the
+        whole step is **one** segment — one batched span per token.
+
+        ``materialize=False`` skips device-pool upkeep (metrics-only
+        simulation, e.g. riding along a real serving loop)."""
+        n = len(layer_paths)
+        rate = self.compute_rate
+        secs = tuple(f / rate for f in flops)
+        paths_sig = tuple(map(tuple, layer_paths))
+        if self.prefetch:
+            for i in range(n):
+                if i > 0:
+                    # layer i was staged during layer i-1's compute window
+                    budget = secs[i - 1]
+                    for p in layer_paths[i]:
+                        self.prefetch_leaf(p, budget)
+                key = ("layer", i, tuple(layer_paths[i]), secs[i])
+
+                def rec(s, i=i):
+                    for p in layer_paths[i]:
+                        self._record_leaf(p)
+                    s.compute(secs[i])
+
+                self.session.run(key, rec)
+        else:
+            key = ("step", paths_sig, secs)
+
+            def rec(s):
+                for i in range(n):
+                    for p in layer_paths[i]:
+                        self._record_leaf(p)
+                    s.compute(secs[i])
+
+            self.session.run(key, rec)
+        self.compute_flops += float(sum(flops))
+        # demand-fetch scan units, memoised per step *shape* (flops don't
+        # matter, so per-token-varying flops can't grow the memo; bounded
+        # anyway so a long-lived server with churning schedules can't leak)
+        scan = self._step_scan.get(paths_sig)
+        if scan is None:
+            if len(self._step_scan) >= 256:
+                self._step_scan.clear()
+            scan = sum(len(self.plan.leaf_ranges[p])
+                       for paths in layer_paths for p in paths)
+            self._step_scan[paths_sig] = scan
+        self.fetch_scan_work += scan
+        self._drain_evictions()
+        if materialize:
+            for paths in layer_paths:
+                for p in paths:
+                    if p not in self._device and self._leaf_resident(p):
+                        self._device[p] = jnp.asarray(self._flat[p])
 
     # ------------------------------------------------------------ metrics
 
@@ -164,6 +288,7 @@ class StreamingExecutor:
         s["overlap_hidden_s"] = self.overlap_hidden_s
         s["dos"] = self.plan.dos()
         s["compute_flops"] = self.compute_flops
+        s.update(self.session.stats())
         return s
 
 
@@ -177,18 +302,16 @@ def run_layer_stream(
     """Drive a layer-ordered streaming pass `steps` times (decode loop).
 
     `layer_paths[i]` lists the param-leaf paths layer i needs;
-    `apply_layer(i, tensors)` runs the math and returns its FLOPs.
+    `apply_layer(i, tensors)` runs the math and returns its FLOPs.  The
+    math runs every step (tensor values never depend on placement); the
+    step's SVM trace replays through `decode_step` — compiled once on the
+    first step, cached-segment replays after.
     """
     n = len(layer_paths)
     for _ in range(steps):
+        flops = []
         for i in range(n):
-            tensors = {p: executor.fetch(p) for p in layer_paths[i]}
-            flops = apply_layer(i, tensors)
-            if executor.prefetch and i + 1 < n:
-                # stage layer i+1 in the double buffer; its migrations are
-                # issued (with layer i's compute window as the overlap
-                # budget) when layer i+1's first fetch drains the buffer
-                executor.queue_prefetch(layer_paths[i + 1],
-                                        flops / PEAK_FLOPS)
-            executor.charge_compute(flops)
+            tensors = {p: executor.tensor(p) for p in layer_paths[i]}
+            flops.append(apply_layer(i, tensors))
+        executor.decode_step(layer_paths, flops)
     return executor.metrics()

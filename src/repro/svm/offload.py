@@ -16,13 +16,20 @@ LRF/FIFO eviction (paper §3.2/§4.1):
     activation migrates back exactly once, and eager spill during forward
     moves evictions off the critical path (paper Alg. 2 + §4.2 parallel
     eviction).
+
+Both passes are **emitted as ops** (touch / compute / spill) through a
+`repro.core.engine.TraceSession` and replayed on the batched engine — the
+eager-spill loop is the `OP_SPILL` boundary op (drain `spill_oldest`
+victims until the next activation fits).  ``engine="scalar"`` replays the
+same recorded ops op-for-op through the manager — the imperative reference
+path, byte-identical by the engine's equivalence guarantee.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core import AddressSpace, SVMManager
+from repro.core import AddressSpace, SVMManager, TraceSession
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
 
 
@@ -32,6 +39,7 @@ class OffloadPlan:
     act_bytes: int              # bytes per layer-boundary activation
     budget_bytes: int           # device pool for activations
     order: str                  # "forward" (naive) | "reverse" (svm-aware)
+    spill_overlap: float = 0.85  # eager-spill fraction hidden by compute
 
     @property
     def resident_layers(self) -> int:
@@ -44,11 +52,38 @@ def plan_offload(n_layers: int, act_bytes: int, budget_bytes: int,
                        "reverse" if svm_aware else "forward")
 
 
+def record_offload(session: TraceSession, plan: OffloadPlan,
+                   rids: list[int], *,
+                   compute_per_layer_s: float = 0.0) -> None:
+    """Record produce + consume as ops, one range per activation.
+
+    Forward: (svm-aware only) an eager-spill op making room for the next
+    activation — §4.2 parallel eviction, mostly off the critical path —
+    then a write-allocate touch and the layer's compute.  Second pass:
+    re-read touches in the plan's order, at backward compute cost."""
+    for i in range(plan.n_layers):
+        if plan.order == "reverse":
+            session.spill(plan.act_bytes, overlap=plan.spill_overlap)
+        session.touch(rids[i], concurrency=8)  # write-allocate
+        session.compute(compute_per_layer_s)
+    order = (range(plan.n_layers) if plan.order == "forward"
+             else range(plan.n_layers - 1, -1, -1))
+    for i in order:
+        session.touch(rids[i], concurrency=8)
+        session.compute(compute_per_layer_s * 2.0)
+
+
 def simulate_offload(plan: OffloadPlan, *,
                      params: CostParams = TPU_V5E_HOST,
-                     compute_per_layer_s: float = 0.0) -> dict:
+                     compute_per_layer_s: float = 0.0,
+                     engine: str = "session",
+                     session_stats: dict | None = None) -> dict:
     """Run produce+consume through the SVM manager, one range per
-    activation."""
+    activation — recorded as ops and replayed as one compiled segment
+    (``engine="session"``) or op-for-op (``engine="scalar"``)."""
+    if engine not in ("session", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "available: 'session', 'scalar'")
     space = AddressSpace(plan.budget_bytes, base=0,
                          alignment=max(plan.act_bytes, 2 * 1024 * 1024))
     allocs = [space.alloc(plan.act_bytes, f"act{i}")
@@ -56,23 +91,12 @@ def simulate_offload(plan: OffloadPlan, *,
     rids = [space.ranges_of(a)[0].rid for a in allocs]
     mgr = SVMManager(space, policy="lrf", params=params)
 
-    # ---- forward: produce activations in order
-    for i in range(plan.n_layers):
-        if plan.order == "reverse":
-            # SVM-aware: eagerly spill the policy's victim (oldest under
-            # LRF/FIFO) when the pool fills, 85 % overlapped with forward
-            # compute (§4.2 parallel eviction, via the public spill API)
-            while mgr.free < plan.act_bytes and len(mgr.policy) > 0:
-                mgr.spill_oldest(overlap=0.85)
-        mgr.touch(rids[i], concurrency=8)     # write-allocate the activation
-        mgr.advance(compute_per_layer_s)
-
-    # ---- second pass: consume (recompute replay or backward)
-    order = (range(plan.n_layers) if plan.order == "forward"
-             else range(plan.n_layers - 1, -1, -1))
-    for i in order:
-        mgr.touch(rids[i], concurrency=8)
-        mgr.advance(compute_per_layer_s * 2.0)
+    session = TraceSession(mgr, scalar=(engine == "scalar"))
+    record_offload(session, plan, rids,
+                   compute_per_layer_s=compute_per_layer_s)
+    session.flush()
+    if session_stats is not None:
+        session_stats.update(session.stats())
 
     s = mgr.summary()
     s["order"] = plan.order

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import AddressSpace, SVMManager
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
+from repro.core.ranges import DEFAULT_BASE
 
 PyTree = Any
 
@@ -53,7 +54,7 @@ class ParamRanges:
 
 
 def plan_param_ranges(params: PyTree, hbm_budget: int,
-                      base: int = 175 * 1024 * 1024) -> ParamRanges:
+                      base: int = DEFAULT_BASE) -> ParamRanges:
     """Build the unified address space + range table for a param tree."""
     space = AddressSpace(hbm_budget, base=base)
     leaf_ranges: dict[str, list[int]] = {}

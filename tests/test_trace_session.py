@@ -1,0 +1,326 @@
+"""Compiled-session runtime (TraceSession + the rebuilt svm/launch layer).
+
+Pins the PR-4 contract:
+
+  * session replay is *resumable*: ops recorded incrementally and replayed
+    in arbitrary segment splits leave the manager byte-identical to the
+    scalar `apply_trace` walk of the same op stream (residency / clock /
+    ledgers carry across segment replays);
+  * the streaming executor and activation-offload scheduler drive the
+    manager exclusively through recorded ops — session-batched vs
+    session-scalar metrics are byte-identical over mode × policy × DOS;
+  * a decode loop's per-token trace compiles once and replays as a cached
+    segment every later token (cache hits counted);
+  * the `OP_SPILL` boundary op (eager-spill-until-free) matches the old
+    imperative spill loop on both engines, and is rejected by the UVM
+    interpreter;
+  * statically: no module under `repro.svm` / `repro.launch` calls the
+    manager's touch/evict methods directly anymore.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    AddressSpace,
+    SVMManager,
+    TraceSession,
+    UVMManager,
+    make_workload,
+)
+from repro.core.engine import compile_trace, execute_compiled
+from repro.core.simulator import apply_trace
+from repro.svm import StreamingExecutor, plan_offload, simulate_offload
+from repro.svm.executor import run_layer_stream
+
+CAP = 2 * GB
+
+
+# ------------------------------------------------- resumable session replay
+
+def _workload_ops(name="stream", dos=1.25):
+    space = AddressSpace(CAP, base=175 * MB, alignment=8 * MB)
+    wl = make_workload(name, int(CAP * dos))
+    wl.build(space)
+    return space, list(wl.trace(space))
+
+
+@pytest.mark.parametrize("name", ("stream", "jacobi2d", "gesummv"))
+@pytest.mark.parametrize("seg", (7, 64, 10_000_000))
+def test_segmented_replay_resumes_byte_identical(name, seg):
+    """Recording a trace into arbitrary segment splits and replaying them
+    back-to-back equals the scalar walk of the whole op stream: manager
+    state carries across segment replays."""
+    space, ops = _workload_ops(name)
+    ms = SVMManager(space, policy="lrf")
+    apply_trace(ms, iter(ops))
+
+    space_b, ops_b = _workload_ops(name)
+    mb = SVMManager(space_b, policy="lrf")
+    sess = TraceSession(mb)
+    for k in range(0, len(ops_b), seg):
+        sess.record(ops_b[k:k + seg])
+        sess.flush()
+    assert ms.summary() == mb.summary()
+    assert ms.events == mb.events
+    assert ms.resident == mb.resident
+    assert ms.free == mb.free
+    assert sess.segments_replayed == -(-len(ops_b) // seg)
+
+
+def test_session_scalar_mode_replays_op_for_op():
+    space, ops = _workload_ops("gesummv")
+    ms = SVMManager(space, policy="clock")
+    apply_trace(ms, iter(ops))
+    space_b, ops_b = _workload_ops("gesummv")
+    mb = SVMManager(space_b, policy="clock")
+    sess = TraceSession(mb, scalar=True)
+    sess.record(ops_b)
+    sess.flush()
+    assert ms.summary() == mb.summary()
+    assert ms.events == mb.events
+
+
+def test_session_run_caches_and_counts():
+    space = AddressSpace(16 * MB, base=0, alignment=2 * MB)
+    for i in range(8):
+        space.alloc(2 * MB, f"a{i}")
+    mgr = SVMManager(space)
+    sess = TraceSession(mgr)
+
+    def rec(s):
+        for rid in range(8):
+            s.touch(rid, concurrency=1)
+
+    ct = sess.run("tok", rec)
+    assert (sess.cache_misses, sess.cache_hits) == (1, 0)
+    for _ in range(3):
+        assert sess.run("tok", rec) is ct     # same compiled segment
+    assert (sess.cache_misses, sess.cache_hits) == (1, 3)
+    assert sess.segments_replayed == 4
+    # replays resumed against live state: later tokens all hit
+    assert mgr.n_migrations == 8
+    # run() refuses to discard pending recorded ops
+    sess.touch(0, concurrency=1)
+    with pytest.raises(RuntimeError, match="pending"):
+        sess.run("tok", rec)
+    sess.flush()
+
+
+def test_session_lru_eviction_bounded():
+    space = AddressSpace(16 * MB, base=0, alignment=2 * MB)
+    space.alloc(2 * MB, "a")
+    sess = TraceSession(SVMManager(space), cache_size=2)
+    for key in ("x", "y", "z"):
+        sess.run(key, lambda s: s.touch(0, concurrency=1))
+    assert sess.get("x") is None          # evicted
+    assert sess.get("y") is not None and sess.get("z") is not None
+
+
+# --------------------------------------------------------------- OP_SPILL
+
+def _spill_ops(n=8):
+    ops = []
+    for i in range(n):
+        ops += [("spill", 2 * MB, 0.85), ("touch", i, 8, 0),
+                ("compute", 1e-4)]
+    for i in range(n - 1, -1, -1):
+        ops += [("touch", i, 8, 0), ("compute", 2e-4)]
+    return ops
+
+
+def _spill_space(n=8):
+    s = AddressSpace(3 * 2 * MB, base=0, alignment=2 * MB)
+    for i in range(n):
+        s.alloc(2 * MB, f"a{i}")
+    return s
+
+
+def test_spill_op_scalar_and_batched_match_imperative_loop():
+    ops = _spill_ops()
+    mgr_i = SVMManager(_spill_space())
+    # the old imperative eager-spill loop, inlined as the reference
+    for op in ops:
+        if op[0] == "spill":
+            while mgr_i.free < op[1] and \
+                    mgr_i.spill_oldest(overlap=op[2]) is not None:
+                pass
+        elif op[0] == "touch":
+            mgr_i.touch(op[1], concurrency=op[2], page_hint=op[3])
+        else:
+            mgr_i.advance(op[1])
+    for scalar in (True, False):
+        mgr = SVMManager(_spill_space())
+        sess = TraceSession(mgr, scalar=scalar)
+        sess.record(_spill_ops())
+        sess.flush()
+        assert mgr.summary() == mgr_i.summary(), f"scalar={scalar}"
+        assert mgr.events == mgr_i.events
+
+
+def test_spill_op_rejected_by_uvm_interpreter():
+    space = AddressSpace(8 * MB, base=0)
+    space.alloc(2 * MB, "a")
+    ct = compile_trace(iter([("spill", 2 * MB, 0.5)]))
+    with pytest.raises(ValueError, match="unsupported"):
+        execute_compiled(ct, UVMManager(space))
+
+
+# ------------------------------------------ executor: session ≡ imperative
+
+def _exec_params(n_layers, d=64):
+    key = jax.random.PRNGKey(0)
+    return {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (d, d),
+                                       jnp.float32)
+            for i in range(n_layers)}
+
+
+MODES = {
+    "naive": {},
+    "svm_aware": {"prefetch": True, "pin": ("l0",)},
+    "zero_copy": {"zero_copy": ("l5", "l6", "l7")},
+}
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("policy", ("lrf", "clock", "lru"))
+def test_executor_session_metrics_match_scalar(mode, policy):
+    """Session-batched decode == the scalar imperative op walk, byte for
+    byte, across streaming mode × policy × oversubscription ratio."""
+    for frac in (0.5, 0.8, 2.0):
+        results = {}
+        for scalar in (True, False):
+            params = _exec_params(12)
+            total = 12 * 64 * 64 * 4
+            ex = StreamingExecutor(params, int(total * frac), policy=policy,
+                                   scalar=scalar, **MODES[mode])
+            paths = [[f"l{i}"] for i in range(12)]
+            results[scalar] = run_layer_stream(
+                ex, paths, lambda i, t: 2.0 * 64 * 64, steps=3)
+        assert results[True] == results[False], (mode, policy, frac)
+
+
+def test_decode_step_equals_per_fetch_walk():
+    """Batching a whole token into one compiled segment emits exactly the
+    imperative per-fetch op sequence: summaries match a fetch-by-fetch
+    drive of the same layer schedule."""
+    paths = [[f"l{i}"] for i in range(10)]
+    flops = [2.0 * 64 * 64] * 10
+
+    def mk():
+        return StreamingExecutor(_exec_params(10), int(10 * 64 * 64 * 4
+                                                       * 0.6))
+    ex_a = mk()
+    for _ in range(4):
+        ex_a.decode_step(paths, flops)
+    ex_b = mk()
+    for _ in range(4):
+        for i, ps in enumerate(paths):
+            for p in ps:
+                ex_b.fetch(p)
+            ex_b.charge_compute(flops[i])
+    assert ex_a.mgr.summary() == ex_b.mgr.summary()
+    assert ex_a.mgr.events == ex_b.mgr.events
+
+
+def test_multi_token_decode_reuses_compiled_trace():
+    """The serving hot path: token 1 records + compiles the per-token
+    trace; every later token replays the cached segment (counted)."""
+    params = _exec_params(16)
+    total = 16 * 64 * 64 * 4
+    ex = StreamingExecutor(params, int(total * 0.6))
+    paths = [[f"l{i}"] for i in range(16)]
+    steps = 6
+    m = run_layer_stream(ex, paths, lambda i, t: 2.0 * 64 * 64, steps=steps)
+    assert m["segment_cache_misses"] == 1          # compiled once
+    assert m["segment_cache_hits"] == steps - 1    # replayed every token
+    assert m["segments_replayed"] == steps
+    assert m["evictions"] > 0                      # genuinely thrashing
+
+
+def test_multi_token_prefetch_decode_reuses_segments():
+    params = _exec_params(12)
+    total = 12 * 64 * 64 * 4
+    ex = StreamingExecutor(params, int(total * 0.6), prefetch=True)
+    paths = [[f"l{i}"] for i in range(12)]
+    steps = 5
+    m = run_layer_stream(ex, paths, lambda i, t: 2.0 * 64 * 64, steps=steps)
+    per_token = m["segment_cache_misses"]
+    assert m["segment_cache_hits"] == (steps - 1) * per_token
+    assert m["overlap_hidden_s"] > 0.0
+
+
+def test_executor_compute_rate_from_cost_params():
+    from repro.core.costmodel import TPU_V5E_HOST
+    import dataclasses
+    params = _exec_params(4)
+    ex = StreamingExecutor(params, 4 * 64 * 64 * 4)
+    assert ex.compute_rate == TPU_V5E_HOST.serve_flops == 197e12 * 0.4
+    fast = dataclasses.replace(TPU_V5E_HOST, serve_flops=1e12)
+    ex2 = StreamingExecutor(params, 4 * 64 * 64 * 4, cost_params=fast)
+    assert ex2.compute_rate == 1e12
+    ex3 = StreamingExecutor(params, 4 * 64 * 64 * 4, cost_params=fast,
+                            compute_rate=5e12)
+    assert ex3.compute_rate == 5e12
+    # slower compute rate => more simulated seconds per flop
+    ex2.charge_compute(1e9)
+    ex3.charge_compute(1e9)
+    assert ex2.mgr.compute_time > ex3.mgr.compute_time
+
+
+# ------------------------------------------- offload: session ≡ imperative
+
+@pytest.mark.parametrize("svm_aware", (False, True))
+@pytest.mark.parametrize("n_layers,res", ((24, 8), (16, 12), (10, 3)))
+def test_offload_session_matches_scalar(svm_aware, n_layers, res):
+    kw = dict(n_layers=n_layers, act_bytes=16 * MB,
+              budget_bytes=res * 16 * MB)
+    for cps in (0.0, 1e-3):
+        a = simulate_offload(plan_offload(**kw, svm_aware=svm_aware),
+                             engine="scalar", compute_per_layer_s=cps)
+        b = simulate_offload(plan_offload(**kw, svm_aware=svm_aware),
+                             engine="session", compute_per_layer_s=cps)
+        assert a == b, (svm_aware, n_layers, res, cps)
+
+
+def test_offload_session_stats_exposed():
+    stats = {}
+    simulate_offload(plan_offload(12, 16 * MB, 4 * 16 * MB),
+                     session_stats=stats)
+    assert stats["segments_sealed"] == stats["segments_replayed"] == 1
+    assert stats["ops_recorded"] == 12 * 3 + 12 * 2  # spill+touch+compute,
+    assert stats["ops_replayed"] == stats["ops_recorded"]
+
+
+def test_offload_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_offload(plan_offload(4, MB, 4 * MB), engine="batched")
+
+
+# ------------------------------------- acceptance: no direct manager pokes
+
+def test_runtime_layer_never_drives_manager_directly():
+    """Every access from the runtime layer must be a recorded op replayed
+    through the engine: no module under repro.svm / repro.launch may call
+    the manager's touch/evict entry points itself."""
+    forbidden = ("mgr.touch(", "mgr.advance(", "mgr.pin(", "mgr.unpin(",
+                 "mgr.writeback(", "mgr.spill_oldest(", "mgr.previct(",
+                 "._evict(")
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    offenders = []
+    for pkg in ("svm", "launch"):
+        pkg_dir = os.path.join(root, pkg)
+        for fn in sorted(os.listdir(pkg_dir)):
+            if not fn.endswith(".py"):
+                continue
+            with open(os.path.join(pkg_dir, fn)) as f:
+                src = f.read()
+            for pat in forbidden:
+                if pat in src:
+                    offenders.append(f"{pkg}/{fn}: {pat}")
+    assert not offenders, offenders
