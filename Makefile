@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-engine bench-gates
+.PHONY: test bench bench-smoke bench-engine bench-gates docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,3 +19,7 @@ bench-engine:
 # fail if any gated BENCH_engine.json ratio is below its committed floor
 bench-gates:
 	$(PY) benchmarks/check_gates.py
+
+# fail if any docs/ internal link or README anchor is broken
+docs-check:
+	python tools/check_docs_links.py

@@ -424,6 +424,61 @@ def beyond_driver():
     return rows
 
 
+def serve_scheduler():
+    """Multi-tenant serving scheduler (beyond-paper, §5 direction): tail
+    latency vs offered load per scheduling policy over one shared SVM
+    pool.  A heterogeneous two-architecture request mix (one arch fits
+    the pool, one is individually oversubscribed) arrives as a seeded
+    Poisson process at increasing rates; each (policy × load) cell is a
+    full deterministic `run_schedule` simulation.  Artifact:
+    ``results/bench/serve_scheduler.json``."""
+    from repro.core import MB as _MB
+    from repro.svm import ModelSpec, run_schedule
+
+    specs = [ModelSpec.synthetic("archA", 12, 4 * _MB, embed_bytes=8 * _MB),
+             ModelSpec.synthetic("archB", 24, 4 * _MB,
+                                 embed_bytes=24 * _MB)]
+    cap = 100 * _MB
+    # mean interarrival (simulated seconds); 0 = saturating burst
+    loads = [0.4, 0.2, 0.1, 0.05, 0.0]
+    policies = ("fifo", "admission", "svm_aware")
+
+    art = {p: [] for p in policies}
+    rows = []
+    for policy in policies:
+        def work(policy=policy):
+            out = []
+            for ia in loads:
+                r = run_schedule(specs, 12, cap, policy=policy, seed=11,
+                                 mean_interarrival_s=ia, tokens=16,
+                                 spec_choice="roundrobin", pin_frac=0.4)
+                out.append({
+                    "mean_interarrival_s": ia,
+                    # null, not inf: the artifact must stay RFC-8259 JSON
+                    "offered_req_s": (1.0 / ia) if ia else None,
+                    "latency_p50_s": r["latency_p50_s"],
+                    "latency_p99_s": r["latency_p99_s"],
+                    "ttft_p99_s": r["ttft_p99_s"],
+                    "agg_tok_s": r["agg_tok_s"],
+                    "evictions_per_token": r["evictions_per_token"],
+                    "evict_to_mig": r["evict_to_mig"],
+                    "segment_hit_rate": r["segment_hit_rate"],
+                    "segment_shared_hits": r["segment_shared_hits"],
+                    "dos_peak": r["dos_peak"],
+                })
+            return out
+
+        curve, us = _timed(work)
+        art[policy] = curve
+        burst = curve[-1]
+        rows.append((f"serve_sched_{policy}", us,
+                     f"p99_burst={burst['latency_p99_s'] * 1e3:.1f}ms"
+                     f"_evtok={burst['evictions_per_token']:.2f}"
+                     f"_hit={burst['segment_hit_rate']:.2f}"))
+    _art("serve_scheduler", art)
+    return rows
+
+
 ALL = (fig2_ranges, fig5_cost, fig6_dos, fig6_variants, fig7_profiles,
        fig8_9_density, fig10_thrashing, fig11_13_svm_aware,
-       table1_svm_vs_uvm, beyond_driver)
+       table1_svm_vs_uvm, beyond_driver, serve_scheduler)

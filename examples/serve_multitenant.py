@@ -1,0 +1,76 @@
+"""Multi-tenant serving over one shared SVM pool: 8 concurrent decode
+requests of two (reduced) architectures contend for a device pool that
+holds barely more than one model, under each scheduling policy.
+
+  * fifo       — admit everything, round-robin: the paper's thrashing
+                 pathology multiplied by N tenants.
+  * admission  — cap admitted working-set bytes at the pool watermark;
+                 later arrivals queue.
+  * svm_aware  — admission + per-request hot-leaf pinning + same-arch
+                 token batching (shared compiled-segment replays).
+
+Same-architecture requests replay one shared compiled per-token segment
+(relocated to each tenant's range offsets) — the `shared` column counts
+those cross-request replays.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+"""
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.svm import ModelSpec, PoolScheduler, make_requests
+
+
+def tiny(arch: str, n_layers: int, d_model: int, d_ff: int):
+    cfg = dataclasses.replace(get_reduced(arch), n_layers=n_layers,
+                              d_model=d_model, d_ff=d_ff)
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def main() -> None:
+    specs = [
+        ModelSpec.from_params("gemma3-1b", tiny("gemma3-1b", 6, 128, 512),
+                              batch=4),
+        ModelSpec.from_params("granite-3-2b",
+                              tiny("granite-3-2b", 8, 192, 768), batch=4),
+    ]
+    # pool: slightly smaller than the larger model — the big arch is
+    # individually oversubscribed (svm_aware's pinning regime), small-arch
+    # pairs fit, and the full 8-request mix offers ~450 % DOS
+    cap = int(max(s.total_bytes for s in specs) * 0.9)
+    offered = sum(specs[i % 2].total_bytes for i in range(8))
+    print(f"pool {cap / 1e6:.1f}MB; 8 requests "
+          f"({specs[0].total_bytes / 1e6:.1f}MB gemma-ish / "
+          f"{specs[1].total_bytes / 1e6:.1f}MB granite-ish), "
+          f"offered DOS {offered / cap * 100:.0f}%\n")
+
+    print(f"  {'policy':10s} {'p50':>8s} {'p99':>8s} {'tok/s':>7s} "
+          f"{'ev/tok':>7s} {'e2m':>5s} {'hit%':>5s} {'shared':>6s}")
+    rows = []
+    for policy in ("fifo", "admission", "svm_aware"):
+        sched = PoolScheduler(cap, policy=policy, pin_frac=0.4)
+        reqs = make_requests(specs, 8, seed=3, mean_interarrival_s=0.01,
+                             tokens=16, spec_choice="roundrobin")
+        r = sched.run(reqs)
+        rows.append(r)
+        print(f"  {policy:10s} {r['latency_p50_s'] * 1e3:7.1f}ms "
+              f"{r['latency_p99_s'] * 1e3:7.1f}ms {r['agg_tok_s']:7.0f} "
+              f"{r['evictions_per_token']:7.2f} {r['evict_to_mig']:5.2f} "
+              f"{r['segment_hit_rate'] * 100:5.1f} "
+              f"{r['segment_shared_hits']:6d}")
+
+    fifo, aware = rows[0], rows[-1]
+    print(f"\nsvm_aware vs fifo: "
+          f"{fifo['evictions_per_token'] / aware['evictions_per_token']:.2f}x "
+          f"fewer evictions/token, "
+          f"{fifo['latency_p99_s'] / aware['latency_p99_s']:.2f}x lower "
+          f"p99 latency (admission keeps the pool below the thrashing "
+          f"cliff; pinning + shared segment replays do the rest)")
+
+
+if __name__ == "__main__":
+    main()

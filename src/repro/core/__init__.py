@@ -27,6 +27,7 @@ from repro.core.engine import (
     TRACE_CACHE,
     ColumnEmitter,
     CompiledTrace,
+    SegmentCache,
     TraceCache,
     TraceSession,
     compile_trace,
@@ -51,7 +52,8 @@ __all__ = [
     "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
     "WORKLOADS", "make_workload",
     "CompiledTrace", "compile_trace", "compile_workload", "execute_compiled",
-    "ColumnEmitter", "TraceCache", "TraceSession", "TRACE_CACHE",
+    "ColumnEmitter", "SegmentCache", "TraceCache", "TraceSession",
+    "TRACE_CACHE",
     "compiled_from_columns",
     "SweepPoint", "run_point", "run_sweep", "trace_key",
 ]

@@ -157,6 +157,26 @@ class CompiledTrace:
         one trace from multiple threads)."""
         return dataclasses.replace(self, span_cache={})
 
+    def relocate(self, delta: int) -> "CompiledTrace":
+        """A copy of this trace with every range id shifted by ``delta``.
+
+        Rebases a segment recorded against one block of ranges onto a
+        congruent block elsewhere in the same address space (two requests
+        of the same architecture planned at different offsets into a
+        shared pool): only the rid columns are rewritten — opcodes,
+        concurrencies, hints, and float args are shared with the source.
+        The caller owns the congruence precondition (same per-op relative
+        rid layout; `repro.svm.scheduler` checks plan geometry before
+        relocating)."""
+        if delta == 0:
+            return self.copy()
+        rids = self.rids.copy()
+        rids[rids >= 0] += delta
+        return dataclasses.replace(
+            self, rids=rids, touch_rid_np=self.touch_rid_np + delta,
+            span_cache={}, _touch_rid=None,
+        ).freeze()
+
     def span(self, s: int, e: int, zc_mask=None, zc_key=None):
         """Touch-stream slice for ops [s, e): (pos_list, rid_list, pos_np,
         rid_np, rids_unique, zc_pos_np, zc_rid_np).  Touches on zero-copy
@@ -511,6 +531,67 @@ def _compile_uncached(workload, space, max_ops, columnar) -> CompiledTrace:
 
 # ------------------------------------------------------------- trace session
 
+class SegmentCache:
+    """Keyed LRU of compiled segments **shared across sessions** bound to
+    one manager — the cross-request analogue of the cross-point
+    `TRACE_CACHE`.
+
+    Entries are stored as ``key -> (rid_base, CompiledTrace)``, where
+    ``rid_base`` is the first range id of the block the recording session
+    was planned against.  A session looking up the same key from a
+    different base receives the segment **relocated** by the rid delta
+    (`CompiledTrace.relocate` — one vectorised add over the rid columns
+    instead of a re-record + re-compile), which is how N same-architecture
+    serving requests planned at different offsets into one shared pool
+    replay a single compiled per-token segment.
+
+    Sharing is only sound between congruent rid blocks (identical per-op
+    relative layout); publishers guarantee that by keying on the
+    architecture *and* its plan geometry (see
+    `repro.svm.scheduler.PoolScheduler`)."""
+
+    def __init__(self, cache_size: int = 256):
+        self.cache_size = cache_size
+        self._segments: "OrderedDict[object, tuple[int, CompiledTrace]]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.relocations = 0
+
+    def __len__(self) -> int:
+        return len(self._segments)
+
+    def get(self, key, rid_base: int) -> CompiledTrace | None:
+        """Cached segment for ``key`` rebased to ``rid_base`` (LRU
+        refreshed), or None."""
+        ent = self._segments.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self._segments.move_to_end(key)
+        self.hits += 1
+        base0, ct = ent
+        if base0 == rid_base:
+            return ct
+        self.relocations += 1
+        return ct.relocate(rid_base - base0)
+
+    def put(self, key, rid_base: int, ct: CompiledTrace) -> None:
+        self._segments[key] = (rid_base, ct)
+        self._segments.move_to_end(key)
+        while len(self._segments) > self.cache_size:
+            self._segments.popitem(last=False)
+
+    def clear(self) -> None:
+        self._segments.clear()
+
+    def stats(self) -> dict:
+        return {"shared_segments": len(self._segments),
+                "shared_lookup_hits": self.hits,
+                "shared_lookup_misses": self.misses,
+                "shared_relocations": self.relocations}
+
+
 class TraceSession:
     """Record → compile → replay API for the runtime layer.
 
@@ -526,7 +607,12 @@ class TraceSession:
     Segments sealed under a key land in a per-session LRU, which is what
     makes a decode loop cheap: the per-token layer-fetch trace records and
     compiles **once** (first token) and replays as a compiled segment every
-    later token (`run`; hits/misses counted).
+    later token (`run`; hits/misses counted).  Sessions bound to one
+    manager can additionally share a `SegmentCache` (``shared_cache=``):
+    on a local miss, `run` consults the shared cache and — when the hit
+    was recorded by a session planned at a different offset into the
+    space — relocates the segment to this session's ``rid_base``, so N
+    same-architecture serving requests replay a single compiled trace.
 
     ``scalar=True`` replays segments op-for-op through the manager's own
     `touch`/`advance`/… methods (`_replay`) instead of the batched
@@ -541,10 +627,17 @@ class TraceSession:
     is SVM-only (the UVM interpreter rejects it).
     """
 
-    def __init__(self, mgr, *, scalar: bool = False, cache_size: int = 64):
+    def __init__(self, mgr, *, scalar: bool = False, cache_size: int = 64,
+                 shared_cache: SegmentCache | None = None,
+                 rid_base: int = 0):
         self.mgr = mgr
         self.scalar = scalar
         self.cache_size = cache_size
+        # cross-session segment sharing (multi-tenant serving): `run`
+        # consults the shared cache on a local miss, relocating the hit
+        # to this session's rid base; fresh seals are published back
+        self.shared_cache = shared_cache
+        self.rid_base = rid_base
         self._codes: list[int] = []
         self._rids: list[int] = []
         self._concs: list[int] = []
@@ -554,6 +647,7 @@ class TraceSession:
         self._segments: "OrderedDict[object, CompiledTrace]" = OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.shared_hits = 0
         self.segments_sealed = 0
         self.segments_replayed = 0
         self.ops_recorded = 0
@@ -646,11 +740,15 @@ class TraceSession:
         self._n_src = 0
         self.segments_sealed += 1
         if key is not None:
-            self._segments[key] = ct
-            self._segments.move_to_end(key)
-            while len(self._segments) > self.cache_size:
-                self._segments.popitem(last=False)
+            self._cache_put(key, ct)
         return ct
+
+    def _cache_put(self, key, ct: CompiledTrace) -> None:
+        """Insert into the session LRU, trimming to ``cache_size``."""
+        self._segments[key] = ct
+        self._segments.move_to_end(key)
+        while len(self._segments) > self.cache_size:
+            self._segments.popitem(last=False)
 
     def get(self, key) -> CompiledTrace | None:
         """Cached segment for ``key`` (LRU-refreshed), or None."""
@@ -689,12 +787,21 @@ class TraceSession:
                 f"TraceSession.run({key!r}): {self.pending} recorded "
                 "ops pending; flush() them before running a segment")
         ct = self.get(key)
+        if ct is None and self.shared_cache is not None:
+            ct = self.shared_cache.get(key, self.rid_base)
+            if ct is not None:
+                # adopt into the local LRU: later tokens replay without
+                # another shared lookup (or relocation)
+                self.shared_hits += 1
+                self._cache_put(key, ct)
+        elif ct is not None:
+            self.cache_hits += 1
         if ct is None:
             self.cache_misses += 1
             record_fn(self)
             ct = self.seal(key)
-        else:
-            self.cache_hits += 1
+            if self.shared_cache is not None:
+                self.shared_cache.put(key, self.rid_base, ct)
         self.replay(ct)
         return ct
 
@@ -704,6 +811,7 @@ class TraceSession:
             "segments_replayed": self.segments_replayed,
             "segment_cache_hits": self.cache_hits,
             "segment_cache_misses": self.cache_misses,
+            "segment_shared_hits": self.shared_hits,
             "ops_recorded": self.ops_recorded,
             "ops_replayed": self.ops_replayed,
         }

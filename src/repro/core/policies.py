@@ -186,6 +186,7 @@ POLICIES = {p.name: p for p in (LRF, LRU, Clock, RandomPolicy)}
 
 
 def make_policy(name: str) -> EvictionPolicy:
+    """A fresh eviction-policy instance by name (lrf/lru/clock/random)."""
     try:
         return POLICIES[name]()
     except KeyError:

@@ -128,6 +128,19 @@ class AddressSpace:
             self._size_arr = arr
         return arr
 
+    def pad_to_alignment(self) -> int:
+        """Advance the allocation cursor to the next alignment boundary.
+
+        The padded gap is unmanaged (no allocation, no ranges) — it models
+        per-tenant placement padding in a shared pool: plans started on an
+        alignment boundary have identical range geometry regardless of
+        what was allocated before them, which is what makes compiled
+        segments relocatable between same-architecture tenants.  Returns
+        the number of padding bytes skipped."""
+        pad = -self._cursor % self.alignment
+        self._cursor += pad
+        return pad
+
     def alloc(self, size: int, name: str = "") -> Allocation:
         a = Allocation(
             alloc_id=len(self.allocations),

@@ -140,6 +140,8 @@ def simulate(
 
 def apply_trace(mgr: SVMManager, trace: Iterable[Op],
                 max_ops: int | None = None) -> None:
+    """Drive a manager through a trace one op at a time — the scalar
+    reference loop every batched tier is byte-identical to."""
     n = 0
     for op in trace:
         tag = op[0]

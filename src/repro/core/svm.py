@@ -78,6 +78,11 @@ class DensitySample:
 
 
 class SVMManager:
+    """The SVM driver state machine (see module docstring): page faults,
+    range-granular migration/eviction, the five-term cost model, and the
+    simulated wall clock, driven by `touch`/`advance`/… calls or — far
+    faster — by compiled traces through `repro.core.engine`."""
+
     def __init__(
         self,
         space: AddressSpace,

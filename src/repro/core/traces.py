@@ -635,6 +635,7 @@ WORKLOADS: dict[str, type[Workload]] = {
 
 
 def make_workload(name: str, total_bytes: int, **kw) -> Workload:
+    """Instantiate a Table-2 workload by name at the given footprint."""
     try:
         cls = WORKLOADS[name]
     except KeyError:

@@ -48,6 +48,11 @@ PER_FAULT_S = 2.5e-6      # per-fault decode/dedupe within a batch
 
 
 class UVMManager:
+    """The NVIDIA-UM baseline (Table 1): VABlock-granular demand paging
+    with cross-op fault batching (CAM dedupe, serviced at driver sync
+    points), dirtiness-tracked LRU eviction, and writeback accounting —
+    the comparison design point for the paper's SVM range machinery."""
+
     def __init__(
         self,
         space: AddressSpace,

@@ -14,6 +14,17 @@ and session cache stats next to the real tok/s.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --svm-budget-frac 0.6 --svm-mode svm_aware
+
+With ``--requests N`` (N > 1) the report switches to the **multi-tenant
+scheduler** (`repro.svm.scheduler`): N decode requests of this model, a
+seeded synthetic arrival process (``--arrival`` = mean interarrival
+seconds on the simulated clock; 0 = all at once), contending for one
+shared SVM pool under ``--sched-policy fifo|admission|svm_aware`` —
+per-request latency percentiles, aggregate tok/s, and eviction pressure
+ride along the real decode's tok/s.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+        --svm-budget-frac 0.6 --requests 8 --sched-policy svm_aware
 """
 
 from __future__ import annotations
@@ -99,6 +110,42 @@ class WeightStream:
             f"{decoded} tokens")
 
 
+def decode_tokens(cfg, serve_step, params, tok, cache, ctx, steps: int):
+    """Greedy-decode ``steps`` tokens through a (jitted) serve step.
+
+    Encoder-decoder configs re-encode their modality context and thread
+    it through every step; VLMs thread the precomputed image context.
+    Decoder-only configs (``ctx`` is None) take the two-argument path.
+    Returns (decoded token list, final cache)."""
+    outs = []
+    for _ in range(steps):
+        if ctx is not None and (cfg.is_encdec or cfg.is_vlm):
+            from repro.models import encode
+            c = encode(params, cfg, ctx) if cfg.is_encdec else ctx
+            tok, cache = serve_step(params, tok, cache, c)
+        else:
+            tok, cache = serve_step(params, tok, cache)
+        outs.append(tok)
+    return outs, cache
+
+
+def schedule_report(r: dict) -> str:
+    """Two-line human summary of a `run_schedule` result dict."""
+    return (
+        f"svm sched[{r['policy']}]: {r['n_requests']} reqs, "
+        f"offered DOS {r['dos_offered']:.0f}% "
+        f"(peak admitted {r['dos_peak']:.0f}%), "
+        f"p50/p90/p99 latency "
+        f"{r['latency_p50_s'] * 1e3:.1f}/{r['latency_p90_s'] * 1e3:.1f}/"
+        f"{r['latency_p99_s'] * 1e3:.1f}ms, "
+        f"agg {r['agg_tok_s']:.0f} tok/s\n"
+        f"  {r['migrations']} migs / {r['evictions']} evicts "
+        f"(e2m {r['evict_to_mig']:.2f}, "
+        f"{r['evictions_per_token']:.2f} ev/tok), "
+        f"segment hit rate {r['segment_hit_rate'] * 100:.1f}% "
+        f"({r['segment_shared_hits']} cross-request replays)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b", choices=list(ARCH_IDS))
@@ -114,7 +161,19 @@ def main() -> None:
                     choices=["lrf", "lru", "clock", "random"])
     ap.add_argument("--svm-mode", default="naive",
                     choices=["naive", "svm_aware", "zero_copy"])
+    ap.add_argument("--requests", type=int, default=1,
+                    help="multi-tenant: N concurrent decode requests of "
+                         "this model over one shared SVM pool (needs "
+                         "--svm-budget-frac)")
+    ap.add_argument("--arrival", type=float, default=0.0,
+                    help="mean interarrival seconds (simulated Poisson "
+                         "process; 0 = all requests arrive at once)")
+    ap.add_argument("--sched-policy", default="svm_aware",
+                    choices=["fifo", "admission", "svm_aware"])
     args = ap.parse_args()
+    if args.requests > 1 and args.svm_budget_frac <= 0.0:
+        ap.error("--requests > 1 needs --svm-budget-frac > 0 "
+                 "(the shared pool is sized from it)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = (make_production_mesh() if args.production_mesh
@@ -151,16 +210,10 @@ def main() -> None:
             logits, cache = prefill_jit(params, prompts)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         t_pre = time.time() - t0
-        outs = [tok]
         t0 = time.time()
-        for _ in range(args.decode):
-            if ctx is not None and cfg.is_encdec or cfg.is_vlm:
-                from repro.models import encode
-                c = encode(params, cfg, ctx) if cfg.is_encdec else ctx
-                tok, cache = serve_jit(params, tok, cache, c)
-            else:
-                tok, cache = serve_jit(params, tok, cache)
-            outs.append(tok)
+        decoded, cache = decode_tokens(cfg, serve_jit, params, tok, cache,
+                                       ctx, args.decode)
+        outs = [tok] + decoded
         t_dec = time.time() - t0
         # the streaming accounting is a pure function of the token count:
         # replay it outside the timed loop so tok/s stays the real number
@@ -174,6 +227,18 @@ def main() -> None:
           f"({args.batch*args.decode/max(t_dec,1e-9):.1f} tok/s)")
     if stream is not None:
         print(stream.report(args.decode))
+    if args.requests > 1:
+        # multi-tenant accounting: N requests of this model contending
+        # for one shared pool (pure simulation — rides the same clock
+        # as the single-stream report above)
+        from repro.svm import ModelSpec, run_schedule
+        spec = ModelSpec.from_params(args.arch, params, batch=args.batch)
+        pool = max(int(spec.total_bytes * args.svm_budget_frac), 1)
+        sched = run_schedule(
+            [spec], args.requests, pool, policy=args.sched_policy,
+            seed=0, mean_interarrival_s=args.arrival,
+            tokens=args.decode, evict_policy=args.svm_policy)
+        print(schedule_report(sched))
     print("first request continuation:", seq[0].tolist())
 
 

@@ -1,8 +1,14 @@
 """Executable SVM runtime: range-granular host<->HBM streaming for
-oversubscribed serving (weight streaming) and training (activation
-offload), driven by the paper's range/fault/eviction model."""
+oversubscribed serving (weight streaming), training (activation offload),
+and multi-tenant serving over one shared device pool, driven by the
+paper's range/fault/eviction model."""
 
-from repro.svm.planner import ParamRanges, plan_param_ranges
+from repro.svm.planner import (
+    ParamRanges,
+    plan_leaf_ranges,
+    plan_param_ranges,
+    tree_leaf_sizes,
+)
 from repro.svm.executor import StreamingExecutor, run_layer_stream
 from repro.svm.offload import (
     OffloadPlan,
@@ -10,7 +16,16 @@ from repro.svm.offload import (
     record_offload,
     simulate_offload,
 )
+from repro.svm.scheduler import (
+    ModelSpec,
+    PoolScheduler,
+    Request,
+    make_requests,
+    run_schedule,
+)
 
-__all__ = ["plan_param_ranges", "ParamRanges", "StreamingExecutor",
-           "run_layer_stream", "OffloadPlan", "plan_offload",
-           "record_offload", "simulate_offload"]
+__all__ = ["plan_param_ranges", "plan_leaf_ranges", "tree_leaf_sizes",
+           "ParamRanges", "StreamingExecutor", "run_layer_stream",
+           "OffloadPlan", "plan_offload", "record_offload",
+           "simulate_offload", "ModelSpec", "PoolScheduler", "Request",
+           "make_requests", "run_schedule"]

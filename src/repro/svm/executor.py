@@ -53,6 +53,11 @@ PyTree = Any
 
 
 class StreamingExecutor:
+    """Serve a model whose weights exceed the HBM budget by streaming
+    parameter leaves through a managed device pool (see module
+    docstring): real tensors + simulated SVM placement, every access
+    recorded and replayed as compiled session segments."""
+
     def __init__(self, params: PyTree, hbm_budget: int, *,
                  policy: str = "lrf",
                  cost_params: CostParams = TPU_V5E_HOST,
@@ -63,15 +68,25 @@ class StreamingExecutor:
                  concurrency: int = 64,
                  compute_rate: float | None = None,
                  profile: bool = True,
-                 scalar: bool = False):
+                 scalar: bool = False,
+                 plan: ParamRanges | None = None,
+                 manager: Any | None = None,
+                 shared_cache: Any | None = None):
         self.host_params = jax.tree.map(np.asarray, params)
-        self.plan: ParamRanges = plan_param_ranges(params, hbm_budget)
+        # shared-pool mode: an externally planned `plan` (offset into a
+        # shared AddressSpace) plus the pool's shared `manager` lets this
+        # executor co-tenant one device pool with other executors /
+        # scheduler requests; `shared_cache` (a core SegmentCache) then
+        # shares compiled segments between congruent tenants
+        self.plan = plan if plan is not None \
+            else plan_param_ranges(params, hbm_budget)
         # profile=False for long-lived serving loops: per-event
         # Event/DensitySample records grow without bound, one per
         # migration/eviction per token
-        self.mgr = self.plan.manager(policy=policy, params=cost_params,
-                                     parallel_evict=parallel_evict,
-                                     profile=profile)
+        self.mgr = manager if manager is not None \
+            else self.plan.manager(policy=policy, params=cost_params,
+                                   parallel_evict=parallel_evict,
+                                   profile=profile)
         # serving compute rate: from the cost model unless overridden
         self.compute_rate = (compute_rate if compute_rate is not None
                              else cost_params.serve_flops)
@@ -84,7 +99,15 @@ class StreamingExecutor:
         # recompile every token instead of replaying
         self.session = TraceSession(
             self.mgr, scalar=scalar,
-            cache_size=max(64, 4 * len(self.plan.leaf_ranges)))
+            cache_size=max(64, 4 * len(self.plan.leaf_ranges)),
+            shared_cache=shared_cache, rid_base=self.plan.rid_base)
+        # shared-cache key namespace: segment relocation is only sound
+        # between congruent tenants, so keys carry a fingerprint of the
+        # plan geometry + touch concurrency — co-tenant executors of
+        # *different* models (even with identical leaf path names) can
+        # never alias each other's segments
+        self._seg_ns = (hash((self.plan.geometry(), concurrency))
+                        if shared_cache is not None else None)
         self._device: dict[str, jnp.ndarray] = {}
         self._flat = dict(self._leaves(self.host_params))
         self._zc_leaves: set[str] = set()
@@ -128,6 +151,11 @@ class StreamingExecutor:
 
     # ----------------------------------------------------------- fetching
 
+    def _key(self, key):
+        """Session segment key, namespaced when a shared cache is wired
+        (see ``_seg_ns`` above)."""
+        return key if self._seg_ns is None else (self._seg_ns, key)
+
     def _record_leaf(self, path: str) -> None:
         for rid in self.plan.leaf_ranges[path]:
             self.session.touch(rid, concurrency=self.concurrency)
@@ -152,7 +180,7 @@ class StreamingExecutor:
         if self._prefetch_q:
             self.drain_prefetch()
         resident_before = self._leaf_resident(path)
-        self.session.run(("fetch", path),
+        self.session.run(self._key(("fetch", path)),
                          lambda s: self._record_leaf(path))
         self.fetch_scan_work += len(self.plan.leaf_ranges[path])
         if not resident_before or path not in self._device:
@@ -170,7 +198,7 @@ class StreamingExecutor:
         (paper §4.2 'parallel implementation'): up to `overlap_s` of the
         migration cost is hidden (ledgered, not rewound)."""
         w0 = self.mgr.wall
-        self.session.run(("fetch", path),
+        self.session.run(self._key(("fetch", path)),
                          lambda s: self._record_leaf(path))
         self.overlap_hidden_s += min(self.mgr.wall - w0, overlap_s)
         self._drain_evictions()
@@ -205,7 +233,7 @@ class StreamingExecutor:
     def charge_compute(self, flops: float) -> None:
         self.compute_flops += flops
         seconds = flops / self.compute_rate
-        self.session.run(("compute", seconds),
+        self.session.run(self._key(("compute", seconds)),
                          lambda s: s.compute(seconds))
 
     def tensor(self, path: str) -> jnp.ndarray:
@@ -243,7 +271,8 @@ class StreamingExecutor:
                     budget = secs[i - 1]
                     for p in layer_paths[i]:
                         self.prefetch_leaf(p, budget)
-                key = ("layer", i, tuple(layer_paths[i]), secs[i])
+                key = self._key(("layer", i, tuple(layer_paths[i]),
+                                 secs[i]))
 
                 def rec(s, i=i):
                     for p in layer_paths[i]:
@@ -252,7 +281,7 @@ class StreamingExecutor:
 
                 self.session.run(key, rec)
         else:
-            key = ("step", paths_sig, secs)
+            key = self._key(("step", paths_sig, secs))
 
             def rec(s):
                 for i in range(n):

@@ -48,6 +48,8 @@ class OffloadPlan:
 
 def plan_offload(n_layers: int, act_bytes: int, budget_bytes: int,
                  svm_aware: bool = True) -> OffloadPlan:
+    """An offload plan whose consume pass runs reverse (svm-aware) or
+    forward (the naive cyclic-traversal baseline)."""
     return OffloadPlan(n_layers, act_bytes, budget_bytes,
                        "reverse" if svm_aware else "forward")
 

@@ -4,12 +4,19 @@ Each parameter leaf is one managed allocation (the hipMallocManaged
 analogue); the paper's alignment rule splits it into SVM ranges. The plan
 maps leaves <-> range ids so the streaming executor can drive the
 SVMManager's fault/migration/eviction machinery with real tensors.
-"""
+
+Shared-pool planning (multi-tenant serving): `plan_leaf_ranges` can plan
+into an **existing** `AddressSpace`, appending this tenant's allocations
+after whatever is already placed there.  With ``align_start=True`` the
+plan begins on an alignment boundary, so every same-architecture tenant
+gets a congruent range layout (identical per-leaf range counts and
+relative rids) — the precondition for relocating compiled trace segments
+between tenants (`CompiledTrace.relocate`)."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import numpy as np
@@ -28,10 +35,19 @@ def _path_str(kp) -> str:
 
 @dataclasses.dataclass
 class ParamRanges:
+    """The leaf ↔ range mapping for one planned parameter set.
+
+    ``space`` may be private to this plan or shared with other tenants'
+    plans (shared-pool serving); ``rid_base`` is the first range id this
+    plan owns, and ``geometry()`` fingerprints the plan's relative range
+    layout (equal geometry ⇒ compiled segments are relocatable between
+    the two plans)."""
+
     space: AddressSpace
     leaf_ranges: dict[str, list[int]]      # leaf path -> range ids
     leaf_bytes: dict[str, int]
     hbm_budget: int
+    rid_base: int = 0
     rid_to_leaf: dict[int, str] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -45,26 +61,67 @@ class ParamRanges:
         return sum(self.leaf_bytes.values())
 
     def dos(self) -> float:
+        """This plan's own degree of oversubscription (%) against the
+        budget (a shared space's aggregate DOS is ``space.dos()``)."""
         return self.total_bytes / self.hbm_budget * 100.0
+
+    def geometry(self) -> tuple:
+        """Relative range layout: per-leaf (path, size, rid offsets from
+        ``rid_base``).  Two plans with equal geometry are congruent — a
+        segment recorded against one relocates onto the other by a pure
+        rid shift."""
+        return tuple(
+            (path, self.leaf_bytes[path],
+             tuple(rid - self.rid_base for rid in rids))
+            for path, rids in self.leaf_ranges.items())
 
     def manager(self, *, policy: str = "lrf",
                 params: CostParams = TPU_V5E_HOST,
                 **kw) -> SVMManager:
+        """A fresh `SVMManager` over this plan's address space."""
         return SVMManager(self.space, policy=policy, params=params, **kw)
 
 
-def plan_param_ranges(params: PyTree, hbm_budget: int,
-                      base: int = DEFAULT_BASE) -> ParamRanges:
-    """Build the unified address space + range table for a param tree."""
-    space = AddressSpace(hbm_budget, base=base)
+def plan_leaf_ranges(leaves: Sequence[tuple[str, int]], hbm_budget: int,
+                     base: int = DEFAULT_BASE, *,
+                     space: AddressSpace | None = None,
+                     align_start: bool = False) -> ParamRanges:
+    """Plan named byte-sized leaves into managed allocations + ranges.
+
+    ``leaves`` is ``[(path, nbytes), ...]`` in fetch order.  Pass an
+    existing ``space`` to co-tenant this plan with others in one shared
+    pool; ``align_start=True`` pads the space's cursor to an alignment
+    boundary first so congruent specs produce congruent plans."""
+    if space is None:
+        space = AddressSpace(hbm_budget, base=base)
+    if align_start:
+        space.pad_to_alignment()
+    rid_base = len(space.ranges)
     leaf_ranges: dict[str, list[int]] = {}
     leaf_bytes: dict[str, int] = {}
+    for path, nbytes in leaves:
+        alloc = space.alloc(max(int(nbytes), 1), name=path)
+        leaf_ranges[path] = [r.rid for r in space.ranges_of(alloc)]
+        leaf_bytes[path] = int(nbytes)
+    return ParamRanges(space=space, leaf_ranges=leaf_ranges,
+                       leaf_bytes=leaf_bytes, hbm_budget=hbm_budget,
+                       rid_base=rid_base)
+
+
+def tree_leaf_sizes(params: PyTree) -> list[tuple[str, int]]:
+    """(path, nbytes) for every leaf of a parameter tree, in tree order."""
+    out = []
     for kp, leaf in jax.tree_util.tree_leaves_with_path(params):
-        path = _path_str(kp)
         nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize \
             if leaf.shape else leaf.dtype.itemsize
-        alloc = space.alloc(max(nbytes, 1), name=path)
-        leaf_ranges[path] = [r.rid for r in space.ranges_of(alloc)]
-        leaf_bytes[path] = nbytes
-    return ParamRanges(space=space, leaf_ranges=leaf_ranges,
-                       leaf_bytes=leaf_bytes, hbm_budget=hbm_budget)
+        out.append((_path_str(kp), nbytes))
+    return out
+
+
+def plan_param_ranges(params: PyTree, hbm_budget: int,
+                      base: int = DEFAULT_BASE, *,
+                      space: AddressSpace | None = None,
+                      align_start: bool = False) -> ParamRanges:
+    """Build the unified address space + range table for a param tree."""
+    return plan_leaf_ranges(tree_leaf_sizes(params), hbm_budget, base,
+                            space=space, align_start=align_start)

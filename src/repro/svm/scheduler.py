@@ -1,0 +1,494 @@
+"""Multi-tenant serving scheduler over one shared SVM device pool.
+
+The paper's central finding — aggressive prefetch plus eviction thrashes
+under oversubscription — bites hardest when *many concurrent decode
+streams* contend for one device pool.  This module multiplexes N serving
+requests (heterogeneous architectures, seeded synthetic arrival process)
+over a **single** `SVMManager`:
+
+  * each admitted request's weights are planned at its own offset into the
+    shared `AddressSpace` (`plan_leaf_ranges(space=…, align_start=True)` —
+    alignment-padded starts keep same-architecture plans congruent),
+  * every token is driven through the request's own `TraceSession`, and
+    sessions share one `SegmentCache`: the first token of the first
+    request of an architecture records + compiles the per-token trace,
+    every same-architecture request thereafter **relocates and replays the
+    same compiled segment** (the cross-request analogue of the sweep
+    runner's cross-point ``TRACE_CACHE``),
+  * per-request wall/migration/eviction accounting is attributed from
+    manager counter deltas around each replay, so the per-request rows
+    sum exactly to the shared manager's aggregates (conservation —
+    tested).
+
+Scheduling policies (`policy=`):
+
+  * ``fifo``       — admit every arrived request immediately and
+                     round-robin one token per request: the thrashing
+                     baseline.  Aggregate working set = all arrived
+                     requests; under oversubscription LRF evicts each
+                     tenant's earliest-fetched layers right before its
+                     next token needs them (the paper's cyclic-traversal
+                     pathology, multiplied by N tenants).
+  * ``admission``  — cap the *admitted* working-set bytes at
+                     ``admit_watermark × capacity``; later arrivals queue
+                     (head-of-line, FIFO).  Trades queueing delay for a
+                     pool that actually fits what is running — the
+                     paper's §5 "SVM-aware scheduling" direction: treat
+                     placement pressure as an admission input.
+  * ``svm_aware``  — admission, plus per-request pinning of the hottest
+                     leaf (app-directed placement, §4.1; skipped when the
+                     leaf would monopolise the pool — the pinned-full-pool
+                     deadlock guard), plus same-architecture token
+                     batching in the round-robin order so consecutive
+                     replays hit the same shared compiled segment.
+
+The scheduler never drives the manager's touch/advance entry points
+directly — every access is a recorded op replayed through the engine
+(`scalar=True` replays op-for-op; byte-identical by the engine's
+equivalence guarantee), and the whole run is deterministic under a fixed
+seed."""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import AddressSpace, SVMManager, SegmentCache, TraceSession
+from repro.core.costmodel import CostParams, TPU_V5E_HOST
+from repro.core.ranges import DEFAULT_BASE
+from repro.svm.planner import ParamRanges, plan_leaf_ranges
+
+PyTree = Any
+
+POLICIES = ("fifo", "admission", "svm_aware")
+ARRIVALS = ("burst", "poisson", "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A serving request's weight-streaming shape: named leaves in fetch
+    order, the per-token layer→leaf fetch groups, and per-layer FLOPs.
+
+    Frozen and hashable — equal specs share compiled per-token segments
+    across requests (the spec itself is the segment key)."""
+
+    arch: str
+    leaves: tuple[tuple[str, int], ...]          # (path, nbytes)
+    layer_paths: tuple[tuple[str, ...], ...]     # per-layer leaf groups
+    flops_per_layer: tuple[float, ...]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(n for _, n in self.leaves)
+
+    @property
+    def hot_leaf(self) -> tuple[str, int]:
+        """The largest leaf — the pinning candidate under ``svm_aware``."""
+        return max(self.leaves, key=lambda pn: pn[1])
+
+    @classmethod
+    def from_params(cls, arch: str, params: PyTree,
+                    batch: int = 1) -> "ModelSpec":
+        """Spec from a real parameter tree: one fetch group per leaf in
+        model order, per-leaf decode FLOPs ≈ 2 · batch · params (the
+        `WeightStream` convention)."""
+        import jax
+
+        leaves, layer_paths, flops = [], [], []
+        for kp, leaf in jax.tree_util.tree_leaves_with_path(params):
+            path = "/".join(
+                getattr(k, "key", getattr(k, "name", str(k))) for k in kp)
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            leaves.append((path, n * leaf.dtype.itemsize))
+            layer_paths.append((path,))
+            flops.append(2.0 * batch * n)
+        return cls(arch=arch, leaves=tuple(leaves),
+                   layer_paths=tuple(layer_paths),
+                   flops_per_layer=tuple(flops))
+
+    @classmethod
+    def synthetic(cls, arch: str, n_layers: int, layer_bytes: int, *,
+                  embed_bytes: int = 0, batch: int = 1) -> "ModelSpec":
+        """A uniform synthetic decoder: optional embedding leaf (touched
+        first and last per token — the hot leaf) plus ``n_layers`` equal
+        weight leaves.  FLOPs assume fp32 leaves (2 · batch · params)."""
+        leaves: list[tuple[str, int]] = []
+        layer_paths: list[tuple[str, ...]] = []
+        flops: list[float] = []
+
+        def add(path: str, nbytes: int) -> None:
+            leaves.append((path, int(nbytes)))
+            layer_paths.append((path,))
+            flops.append(2.0 * batch * (nbytes / 4.0))
+
+        if embed_bytes:
+            add(f"{arch}/embed", embed_bytes)
+        for i in range(n_layers):
+            add(f"{arch}/l{i:03d}", layer_bytes)
+        if embed_bytes:
+            # tied head re-read: the embedding leaf is touched again
+            layer_paths.append((f"{arch}/embed",))
+            flops.append(2.0 * batch * (embed_bytes / 4.0))
+        return cls(arch=arch, leaves=tuple(leaves),
+                   layer_paths=tuple(layer_paths),
+                   flops_per_layer=tuple(flops))
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode stream: its spec, arrival time, decode length, and —
+    once admitted — its plan/session plus attributed accounting."""
+
+    req_id: int
+    spec: ModelSpec
+    arrival_s: float
+    n_tokens: int
+    # filled at admission
+    plan: ParamRanges | None = None
+    session: TraceSession | None = None
+    admit_seq: int = -1
+    admit_s: float = -1.0
+    first_token_s: float = -1.0
+    finish_s: float = -1.0
+    tokens_done: int = 0
+    pinned_rids: tuple[int, ...] = ()
+    pinned_bytes: int = 0
+    # manager-counter deltas attributed to this request's replays
+    migrations: int = 0
+    evictions: int = 0
+    bytes_migrated: int = 0
+    bytes_evicted: int = 0
+    svm_wall_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admit_s - self.arrival_s
+
+    def row(self) -> dict:
+        """Flat per-request result row."""
+        return {
+            "req_id": self.req_id, "arch": self.spec.arch,
+            "bytes": self.spec.total_bytes, "arrival_s": self.arrival_s,
+            "admit_s": self.admit_s, "finish_s": self.finish_s,
+            "latency_s": self.latency_s,
+            "queue_wait_s": self.queue_wait_s,
+            "ttft_s": ((self.first_token_s - self.arrival_s)
+                       if self.tokens_done else 0.0),
+            "tokens": self.tokens_done,
+            "migrations": self.migrations, "evictions": self.evictions,
+            "bytes_migrated": self.bytes_migrated,
+            "bytes_evicted": self.bytes_evicted,
+            "svm_wall_s": self.svm_wall_s,
+            "pinned_bytes": self.pinned_bytes,
+        }
+
+
+def make_requests(specs: Sequence[ModelSpec], n_requests: int, *,
+                  seed: int = 0, mean_interarrival_s: float = 0.0,
+                  arrival: str = "poisson", tokens: int = 32,
+                  token_jitter: int = 0,
+                  spec_choice: str = "random") -> list[Request]:
+    """Seeded synthetic arrival process.
+
+    ``arrival``: ``burst`` (everything at t=0 — also forced when
+    ``mean_interarrival_s`` is 0), ``poisson`` (exponential
+    interarrivals), or ``uniform`` (fixed spacing).  Specs are drawn
+    ``random``-ly or assigned ``roundrobin``; decode lengths are
+    ``tokens ± token_jitter``.  Same seed ⇒ same request list."""
+    if arrival not in ARRIVALS:
+        raise ValueError(f"unknown arrival {arrival!r}; "
+                         f"available: {ARRIVALS}")
+    if spec_choice not in ("random", "roundrobin"):
+        raise ValueError(f"unknown spec_choice {spec_choice!r}")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        if i > 0 and mean_interarrival_s > 0.0 and arrival != "burst":
+            t += (float(rng.exponential(mean_interarrival_s))
+                  if arrival == "poisson" else mean_interarrival_s)
+        spec = (specs[i % len(specs)] if spec_choice == "roundrobin"
+                else specs[int(rng.integers(len(specs)))])
+        n_tok = tokens if not token_jitter else int(
+            rng.integers(max(1, tokens - token_jitter),
+                         tokens + token_jitter + 1))
+        out.append(Request(req_id=i, spec=spec, arrival_s=t,
+                           n_tokens=n_tok))
+    return out
+
+
+class PoolScheduler:
+    """Multiplex decode requests over one shared SVM device pool.
+
+    One `AddressSpace` + one `SVMManager` + one shared `SegmentCache`;
+    requests are admitted, planned, and interleaved per the scheduling
+    ``policy`` (see module docstring).  `run(requests)` drives every
+    request to completion on the simulated clock and returns the
+    aggregate/percentile report."""
+
+    def __init__(self, capacity_bytes: int, *, policy: str = "svm_aware",
+                 evict_policy: str = "lrf",
+                 cost_params: CostParams = TPU_V5E_HOST,
+                 admit_watermark: float = 1.0, pin_frac: float = 0.25,
+                 concurrency: int = 64, compute_rate: float | None = None,
+                 scalar: bool = False, base: int = DEFAULT_BASE,
+                 segment_cache_size: int = 512):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown scheduling policy {policy!r}; "
+                             f"available: {POLICIES}")
+        self.policy = policy
+        self.capacity = capacity_bytes
+        self.space = AddressSpace(capacity_bytes, base=base)
+        self.mgr = SVMManager(self.space, policy=evict_policy,
+                              params=cost_params, profile=False)
+        self.shared_cache = SegmentCache(segment_cache_size)
+        self.admit_watermark = admit_watermark
+        self.pin_frac = pin_frac
+        self.concurrency = concurrency
+        self.compute_rate = (compute_rate if compute_rate is not None
+                             else cost_params.serve_flops)
+        self.scalar = scalar
+        self.now = 0.0
+        self.admitted_bytes = 0
+        self.peak_admitted_bytes = 0
+        self.pinned_bytes_total = 0
+        self._admit_seq = 0
+        self._geometry: dict[ModelSpec, tuple] = {}
+        self._sessions: list[TraceSession] = []
+
+    # -------------------------------------------------------- admission
+
+    def _fits(self, spec: ModelSpec) -> bool:
+        return (self.admitted_bytes + spec.total_bytes
+                <= self.admit_watermark * self.capacity)
+
+    def _admit(self, queued: "deque[Request]",
+               active: list[Request]) -> None:
+        while queued:
+            head = queued[0]
+            if self.policy != "fifo" and not self._fits(head.spec):
+                # head-of-line admission control; an oversized request
+                # that can never fit is admitted alone rather than
+                # deadlocking the queue
+                if active or self.admitted_bytes > 0:
+                    break
+            self._admit_one(queued.popleft(), active)
+
+    def _admit_one(self, req: Request, active: list[Request]) -> None:
+        req.plan = plan_leaf_ranges(req.spec.leaves, self.capacity,
+                                    space=self.space, align_start=True)
+        geo = req.plan.geometry()
+        proto = self._geometry.setdefault(req.spec, geo)
+        if geo != proto:   # pragma: no cover — congruence is by design
+            raise AssertionError(
+                f"req {req.req_id}: plan geometry diverged from its "
+                f"spec's prototype; segment sharing would be unsound")
+        req.session = TraceSession(
+            self.mgr, scalar=self.scalar, cache_size=8,
+            shared_cache=self.shared_cache, rid_base=req.plan.rid_base)
+        self._sessions.append(req.session)
+        req.admit_s = self.now
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.admitted_bytes += req.spec.total_bytes
+        self.peak_admitted_bytes = max(self.peak_admitted_bytes,
+                                       self.admitted_bytes)
+        active.append(req)
+        if self.policy == "svm_aware":
+            self._pin_hot_leaf(req)
+
+    def _pin_hot_leaf(self, req: Request) -> None:
+        """App-directed placement (§4.1): pin the request's hottest leaf —
+        unless it would monopolise the pool (no leaf above half the
+        capacity, and all pins together stay under ``pin_frac``): a
+        pinned-full pool deadlocks every later migration."""
+        path, nbytes = req.spec.hot_leaf
+        if nbytes > self.capacity // 2:
+            return
+        if self.pinned_bytes_total + nbytes > self.pin_frac * self.capacity:
+            return
+        rids = tuple(req.plan.leaf_ranges[path])
+        self._replay_attributed(req, lambda: self._flush_pins(req, rids))
+        req.pinned_rids = rids
+        req.pinned_bytes = nbytes
+        self.pinned_bytes_total += nbytes
+
+    def _flush_pins(self, req: Request, rids: tuple[int, ...]) -> None:
+        for rid in rids:
+            req.session.pin(rid)
+        req.session.flush()
+
+    # -------------------------------------------------------- decode loop
+
+    def _round_order(self, active: list[Request]) -> list[Request]:
+        """One-token-per-request round order.  ``svm_aware`` groups
+        same-architecture requests back to back so consecutive replays
+        hit the same shared compiled segment; the others round-robin in
+        admission order."""
+        if self.policy == "svm_aware":
+            return sorted(active, key=lambda r: (r.spec.arch, r.admit_seq))
+        return sorted(active, key=lambda r: r.admit_seq)
+
+    def _replay_attributed(self, req: Request, fn) -> None:
+        """Run one session replay and attribute the manager's counter
+        deltas (wall, migrations, evictions, bytes) to ``req`` — the
+        per-request rows sum exactly to the shared manager's totals."""
+        m = self.mgr
+        w0, mig0, ev0 = m.wall, m.n_migrations, m.n_evictions
+        bm0, be0 = m.bytes_migrated, m.bytes_evicted
+        fn()
+        req.svm_wall_s += m.wall - w0
+        req.migrations += m.n_migrations - mig0
+        req.evictions += m.n_evictions - ev0
+        req.bytes_migrated += m.bytes_migrated - bm0
+        req.bytes_evicted += m.bytes_evicted - be0
+        self.now += m.wall - w0
+
+    def _decode_token(self, req: Request) -> None:
+        spec, rate, conc = req.spec, self.compute_rate, self.concurrency
+        key = ("tok", spec)
+
+        def rec(s, plan=req.plan):
+            for paths, fl in zip(spec.layer_paths, spec.flops_per_layer):
+                for p in paths:
+                    for rid in plan.leaf_ranges[p]:
+                        s.touch(rid, concurrency=conc)
+                s.compute(fl / rate)
+
+        self._replay_attributed(req, lambda: req.session.run(key, rec))
+        req.tokens_done += 1
+        if req.tokens_done == 1:
+            req.first_token_s = self.now
+
+    def _retire(self, req: Request, active: list[Request],
+                done: list[Request]) -> None:
+        if req.pinned_rids:
+            # release app-directed placement; the ranges rejoin the
+            # eviction policy and age out under other tenants' pressure
+            def unpin():
+                for rid in req.pinned_rids:
+                    req.session.unpin(rid)
+                req.session.flush()
+            self._replay_attributed(req, unpin)
+            self.pinned_bytes_total -= req.pinned_bytes
+        req.finish_s = self.now
+        self.admitted_bytes -= req.spec.total_bytes
+        active.remove(req)
+        done.append(req)
+
+    # --------------------------------------------------------------- run
+
+    def run(self, requests: Sequence[Request]) -> dict:
+        """Drive every request to completion; returns the report dict."""
+        waiting = deque(sorted(requests,
+                               key=lambda r: (r.arrival_s, r.req_id)))
+        queued: "deque[Request]" = deque()
+        active: list[Request] = []
+        done: list[Request] = []
+        eps = 1e-12
+
+        def ingest() -> None:
+            while waiting and waiting[0].arrival_s <= self.now + eps:
+                queued.append(waiting.popleft())
+
+        while waiting or queued or active:
+            ingest()
+            self._admit(queued, active)
+            if not active:
+                # pool idle until the next arrival
+                self.now = max(self.now, waiting[0].arrival_s)
+                continue
+            for req in self._round_order(active):
+                if req.tokens_done >= req.n_tokens:
+                    # zero-token (or raced-complete) request: retire it
+                    # here, not via a decode, or the loop never drains
+                    self._retire(req, active, done)
+                    continue
+                self._decode_token(req)
+                if req.tokens_done >= req.n_tokens:
+                    self._retire(req, active, done)
+                # arrivals during this token can be admitted mid-round;
+                # they join the next round's order
+                ingest()
+                self._admit(queued, active)
+        return self._result(done)
+
+    # ------------------------------------------------------------ report
+
+    def _result(self, done: list[Request]) -> dict:
+        done = sorted(done, key=lambda r: r.req_id)
+        decoded = [r for r in done if r.tokens_done > 0]
+        lat = np.array([r.latency_s for r in done])
+        ttft = np.array([r.first_token_s - r.arrival_s for r in decoded])
+        waits = np.array([r.queue_wait_s for r in done])
+
+        def pct(arr: np.ndarray, q: float) -> float:
+            return float(np.percentile(arr, q)) if len(arr) else 0.0
+        total_tokens = sum(r.tokens_done for r in done)
+        offered = sum(r.spec.total_bytes for r in done)
+        m = self.mgr
+        seg_local_hits = sum(s.cache_hits for s in self._sessions)
+        seg_shared_hits = sum(s.shared_hits for s in self._sessions)
+        seg_misses = sum(s.cache_misses for s in self._sessions)
+        lookups = seg_local_hits + seg_shared_hits + seg_misses
+        return {
+            "policy": self.policy,
+            "capacity_bytes": self.capacity,
+            "n_requests": len(done),
+            "total_tokens": total_tokens,
+            "makespan_s": self.now,
+            "agg_tok_s": total_tokens / self.now if self.now else 0.0,
+            "latency_p50_s": pct(lat, 50),
+            "latency_p90_s": pct(lat, 90),
+            "latency_p99_s": pct(lat, 99),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p99_s": pct(ttft, 99),
+            "queue_wait_mean_s": float(waits.mean()) if len(waits) else 0.0,
+            "dos_offered": offered / self.capacity * 100.0,
+            "dos_peak": self.peak_admitted_bytes / self.capacity * 100.0,
+            "migrations": m.n_migrations,
+            "evictions": m.n_evictions,
+            "evict_to_mig": m.evict_to_mig_ratio,
+            "evictions_per_token": (m.n_evictions / total_tokens
+                                    if total_tokens else 0.0),
+            "segment_hit_rate": ((seg_local_hits + seg_shared_hits)
+                                 / lookups if lookups else 0.0),
+            "segment_local_hits": seg_local_hits,
+            "segment_shared_hits": seg_shared_hits,
+            "segment_misses": seg_misses,
+            "shared_cache": self.shared_cache.stats(),
+            "requests": [r.row() for r in done],
+            "conservation": {
+                "svm_wall_s": sum(r.svm_wall_s for r in done),
+                "migrations": sum(r.migrations for r in done),
+                "evictions": sum(r.evictions for r in done),
+                "bytes_migrated": sum(r.bytes_migrated for r in done),
+                "bytes_evicted": sum(r.bytes_evicted for r in done),
+            },
+            "mgr": m.summary(),
+        }
+
+
+def run_schedule(specs: Sequence[ModelSpec], n_requests: int,
+                 capacity_bytes: int, *, policy: str = "svm_aware",
+                 seed: int = 0, mean_interarrival_s: float = 0.0,
+                 arrival: str = "poisson", tokens: int = 32,
+                 token_jitter: int = 0, spec_choice: str = "random",
+                 **scheduler_kw) -> dict:
+    """Build a seeded request mix and run it through a fresh
+    `PoolScheduler` — the one-call entry point for benchmarks, figures,
+    and the serving CLI."""
+    reqs = make_requests(specs, n_requests, seed=seed,
+                         mean_interarrival_s=mean_interarrival_s,
+                         arrival=arrival, tokens=tokens,
+                         token_jitter=token_jitter,
+                         spec_choice=spec_choice)
+    sched = PoolScheduler(capacity_bytes, policy=policy, **scheduler_kw)
+    return sched.run(reqs)

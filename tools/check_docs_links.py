@@ -1,0 +1,123 @@
+"""Docs link checker: every relative markdown link and heading anchor in
+README.md and docs/*.md must resolve.
+
+Checks, for each `[text](target)` link:
+  * relative file targets exist (resolved against the linking file's
+    directory; external http(s)/mailto links are skipped),
+  * `#fragment` anchors — same-file or `file.md#fragment` — match a
+    heading slug of the target file (GitHub-style slugging, duplicate
+    headings get ``-1``/``-2`` suffixes).
+
+Run directly (CI / `make docs-check`) or import `check_files` /
+`collect_errors` from tests.
+
+Usage:  python tools/check_docs_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for one heading line."""
+    text = heading.strip().lower()
+    kept = [c for c in text if c.isalnum() or c in " -_"]
+    return "".join(kept).replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    """All anchor slugs a markdown file exposes (fenced code skipped;
+    duplicate headings numbered like GitHub)."""
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = slugify(m.group(2))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_files(md_files: list[str]) -> list[str]:
+    """Return a list of 'file: problem' strings (empty = all links ok)."""
+    errors: list[str] = []
+    slug_cache: dict[str, set[str]] = {}
+
+    def slugs_of(path: str) -> set[str]:
+        key = os.path.abspath(path)
+        if key not in slug_cache:
+            slug_cache[key] = heading_slugs(path)
+        return slug_cache[key]
+
+    for md in md_files:
+        base = os.path.dirname(md)
+        targets = []
+        in_fence = False
+        with open(md, encoding="utf-8") as f:
+            for line in f:
+                # display-only code is not a link (mirrors heading_slugs)
+                if line.lstrip().startswith("```"):
+                    in_fence = not in_fence
+                    continue
+                if not in_fence:
+                    targets += LINK_RE.findall(line)
+        for target in targets:
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, frag = target.partition("#")
+            tgt = md if not path_part else os.path.normpath(
+                os.path.join(base, path_part))
+            if not os.path.exists(tgt):
+                errors.append(f"{md}: broken link target {target!r}")
+                continue
+            if frag and os.path.isfile(tgt):
+                if frag not in slugs_of(tgt):
+                    errors.append(
+                        f"{md}: anchor #{frag} not found in {tgt}")
+    return errors
+
+
+def collect_errors(root: str) -> list[str]:
+    """Check README.md plus every markdown file under docs/."""
+    md_files = []
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        md_files.append(readme)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        md_files += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                     if f.endswith(".md")]
+    return check_files(md_files)
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..")
+    errors = collect_errors(root)
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print("docs links + anchors all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
