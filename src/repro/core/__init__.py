@@ -34,6 +34,7 @@ from repro.core.engine import (
     compile_workload,
     compiled_from_columns,
     execute_compiled,
+    execute_fused,
 )
 from repro.core.simulator import RunResult, Workload, apply_trace, dos_sweep, simulate
 from repro.core.svm import DensitySample, Event, SVMManager
@@ -52,6 +53,7 @@ __all__ = [
     "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
     "WORKLOADS", "make_workload",
     "CompiledTrace", "compile_trace", "compile_workload", "execute_compiled",
+    "execute_fused",
     "ColumnEmitter", "SegmentCache", "TraceCache", "TraceSession",
     "TRACE_CACHE",
     "compiled_from_columns",

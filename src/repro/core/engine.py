@@ -65,10 +65,11 @@ streaming executor does).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import weakref
 from collections import OrderedDict
-from typing import Iterable
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -83,7 +84,7 @@ from repro.core.ranges import PAGE, AddressSpace
 from repro.core.svm import DensitySample, Event, SVMManager
 from repro.core.uvm import UVMManager
 
-ENGINE_VERSION = "3"
+ENGINE_VERSION = "4"
 
 OP_TOUCH = 0
 OP_COMPUTE = 1
@@ -116,6 +117,9 @@ class CompiledTrace:
     touch_pos_np: np.ndarray
     touch_rid_np: np.ndarray
     n_ops: int             # source ops consumed (incl. kernel markers)
+    # op-index boundaries of the source segments when this trace was
+    # built by `concat` (len = n segments + 1); None for plain traces
+    seg_bounds: np.ndarray | None = None
     # per-span slices + uniqueness flags, memoised across executions
     span_cache: dict = dataclasses.field(default_factory=dict)
     # lazy python-list mirrors of the touch stream (Phase A iterates
@@ -149,6 +153,8 @@ class CompiledTrace:
                     self.fargs, self.boundaries, self.touch_pos_np,
                     self.touch_rid_np):
             arr.flags.writeable = False
+        if self.seg_bounds is not None:
+            self.seg_bounds.flags.writeable = False
         return self
 
     def copy(self) -> "CompiledTrace":
@@ -175,6 +181,40 @@ class CompiledTrace:
         return dataclasses.replace(
             self, rids=rids, touch_rid_np=self.touch_rid_np + delta,
             span_cache={}, _touch_rid=None,
+        ).freeze()
+
+    @staticmethod
+    def concat(segments: "Sequence[CompiledTrace]") -> "CompiledTrace":
+        """One mega-trace = the given segments back-to-back, with the
+        per-segment op boundaries recorded in ``seg_bounds``.
+
+        This is the fused-round primitive: a scheduler round's relocated
+        per-token segments stitch into a single op-column trace that the
+        batched interpreter executes in one pass, and `execute_fused`
+        samples the manager counters at each ``seg_bounds`` cut to
+        attribute costs back per segment.  Executing the concatenation is
+        bit-identical to executing the segments back-to-back (the
+        `TraceSession` resumability guarantee), so no recompilation or
+        re-derivation happens here — columns concatenate, and the
+        derived touch/boundary indices shift by each segment's offset."""
+        if not segments:
+            raise ValueError("CompiledTrace.concat: no segments")
+        offs = np.concatenate(
+            ([0], np.cumsum([len(s) for s in segments]))).astype(np.int64)
+        return CompiledTrace(
+            codes=np.concatenate([s.codes for s in segments]),
+            rids=np.concatenate([s.rids for s in segments]),
+            concs=np.concatenate([s.concs for s in segments]),
+            hints=np.concatenate([s.hints for s in segments]),
+            fargs=np.concatenate([s.fargs for s in segments]),
+            boundaries=np.concatenate(
+                [s.boundaries + o for s, o in zip(segments, offs)]),
+            touch_pos_np=np.concatenate(
+                [s.touch_pos_np + o for s, o in zip(segments, offs)]),
+            touch_rid_np=np.concatenate(
+                [s.touch_rid_np for s in segments]),
+            n_ops=sum(s.n_ops for s in segments),
+            seg_bounds=offs,
         ).freeze()
 
     def span(self, s: int, e: int, zc_mask=None, zc_key=None):
@@ -557,6 +597,7 @@ class SegmentCache:
         self.hits = 0
         self.misses = 0
         self.relocations = 0
+        self.concats = 0
 
     def __len__(self) -> int:
         return len(self._segments)
@@ -576,6 +617,39 @@ class SegmentCache:
         self.relocations += 1
         return ct.relocate(rid_base - base0)
 
+    def batch_relocate(self, key,
+                       rid_bases: Sequence[int]) -> list[CompiledTrace] | None:
+        """One segment for ``key``, rebased to *each* of ``rid_bases`` —
+        a whole scheduler round's worth of same-architecture lookups in a
+        single cache probe.  Counter contract matches the sequential
+        `get` chain exactly: one miss when the key is absent (the caller
+        records once and retries for the rest), else one hit per
+        requested base and one relocation per base that differs from the
+        recorded prototype's."""
+        ent = self._segments.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self._segments.move_to_end(key)
+        self.hits += len(rid_bases)
+        base0, ct = ent
+        out = []
+        for base in rid_bases:
+            if base == base0:
+                out.append(ct)
+            else:
+                self.relocations += 1
+                out.append(ct.relocate(base - base0))
+        return out
+
+    def concat(self, segments: Sequence[CompiledTrace]) -> CompiledTrace:
+        """Stitch relocated segments into one fused-round mega-trace
+        (`CompiledTrace.concat`), counting the build for `stats()` —
+        schedulers memoise the result per block, so ``shared_concats``
+        measures distinct round shapes, not rounds."""
+        self.concats += 1
+        return CompiledTrace.concat(segments)
+
     def put(self, key, rid_base: int, ct: CompiledTrace) -> None:
         self._segments[key] = (rid_base, ct)
         self._segments.move_to_end(key)
@@ -589,7 +663,8 @@ class SegmentCache:
         return {"shared_segments": len(self._segments),
                 "shared_lookup_hits": self.hits,
                 "shared_lookup_misses": self.misses,
-                "shared_relocations": self.relocations}
+                "shared_relocations": self.relocations,
+                "shared_concats": self.concats}
 
 
 class TraceSession:
@@ -777,14 +852,16 @@ class TraceSession:
         self.replay(ct)
         return ct
 
-    def run(self, key, record_fn) -> CompiledTrace:
-        """The decode-loop primitive: replay the compiled segment cached
-        under ``key``, or — on the first encounter — record it via
-        ``record_fn(session)``, seal, cache, and replay.  Requires an empty
-        recording buffer (a cached replay cannot absorb pending ops)."""
+    def fetch(self, key, record_fn) -> CompiledTrace:
+        """Resolve ``key`` to a compiled segment without executing it:
+        local LRU hit, shared-cache relocation, or — on the first
+        encounter — record via ``record_fn(session)``, seal, cache, and
+        publish.  `run` is fetch + replay; the fused scheduler fetches
+        every segment of a round up front and replays their concatenation
+        in one batched pass.  Requires an empty recording buffer."""
         if self._codes or self._n_src:   # incl. pending kernel markers
             raise RuntimeError(
-                f"TraceSession.run({key!r}): {self.pending} recorded "
+                f"TraceSession.fetch({key!r}): {self.pending} recorded "
                 "ops pending; flush() them before running a segment")
         ct = self.get(key)
         if ct is None and self.shared_cache is not None:
@@ -802,6 +879,13 @@ class TraceSession:
             ct = self.seal(key)
             if self.shared_cache is not None:
                 self.shared_cache.put(key, self.rid_base, ct)
+        return ct
+
+    def run(self, key, record_fn) -> CompiledTrace:
+        """The decode-loop primitive: replay the compiled segment cached
+        under ``key``, or — on the first encounter — record it via
+        ``record_fn(session)``, seal, cache, and replay."""
+        ct = self.fetch(key, record_fn)
         self.replay(ct)
         return ct
 
@@ -824,39 +908,71 @@ _SPACE_TABLES: "weakref.WeakKeyDictionary[AddressSpace, dict]" = \
     weakref.WeakKeyDictionary()
 
 
+def _params_tables(size_arr: np.ndarray, params: CostParams,
+                   xcost: dict | None = None,
+                   zcc: dict | None = None) -> dict:
+    usz = np.unique(size_arr)
+    # migration_cost is a pure function of (size, params): memoised
+    # values are bit-identical to what the scalar path computes fresh
+    mcs = [migration_cost(int(s), params) for s in usz.tolist()]
+    return {
+        "usz": usz,
+        "terms": np.array([[m.cpu_unmap, m.sdma_setup, m.alloc,
+                            m.cpu_update, m.misc] for m in mcs]),
+        "ecs": np.array([eviction_cost(int(s), params)
+                         for s in usz.tolist()]),
+        "sizeidx": np.searchsorted(usz, size_arr),
+        # off-table sizes (deferred granules) and zero-copy touch costs:
+        # pure (size, params) memos, carried across table growth
+        "xcost": xcost if xcost is not None else {},
+        "zcc": zcc if zcc is not None else {},
+    }
+
+
 def _tables(space: AddressSpace, params: CostParams) -> dict:
     tab = _SPACE_TABLES.get(space)
-    if tab is None or tab["n_ranges"] != len(space.ranges):
+    n = len(space.ranges)
+    if tab is None:
         size_arr = np.array([r.end - r.start for r in space.ranges],
                             dtype=np.int64)
         tab = {
-            "n_ranges": len(space.ranges),
+            "n_ranges": n,
             "sizes": size_arr.tolist(),
             "size_arr": size_arr,
             "alloc_ids": [r.alloc_id for r in space.ranges],
             "pages": np.array([r.start // PAGE for r in space.ranges],
                               dtype=np.int64),
             "params": {},
+            "merged": {},
         }
         _SPACE_TABLES[space] = tab
-    per_params = tab["params"].get(params)
-    if per_params is None:
-        usz = np.unique(tab["size_arr"])
-        # migration_cost is a pure function of (size, params): memoised
-        # values are bit-identical to what the scalar path computes fresh
-        mcs = [migration_cost(int(s), params) for s in usz.tolist()]
-        per_params = {
-            "usz": usz,
-            "terms": np.array([[m.cpu_unmap, m.sdma_setup, m.alloc,
-                                m.cpu_update, m.misc] for m in mcs]),
-            "ecs": np.array([eviction_cost(int(s), params)
-                             for s in usz.tolist()]),
-            "sizeidx": np.searchsorted(usz, tab["size_arr"]),
-            "xcost": {},    # off-table sizes (deferred granules): 5 terms
-            "zcc": {},      # zero-copy touch cost per range size
-        }
-        tab["params"][params] = per_params
-    return {**tab, **per_params}
+    elif tab["n_ranges"] != n:
+        # the space only ever *grows* (AddressSpace.alloc extends the
+        # range list), so admissions mid-run extend the static columns
+        # with the new tail instead of rebuilding O(n_ranges) tables
+        new = space.ranges[tab["n_ranges"]:]
+        tail = np.array([r.end - r.start for r in new], dtype=np.int64)
+        tab["n_ranges"] = n
+        tab["size_arr"] = np.concatenate([tab["size_arr"], tail])
+        tab["sizes"].extend(tail.tolist())
+        tab["alloc_ids"].extend(r.alloc_id for r in new)
+        tab["pages"] = np.concatenate(
+            [tab["pages"],
+             np.array([r.start // PAGE for r in new], dtype=np.int64)])
+        tab.pop("zc_masks", None)      # stale length
+        for p, pp in tab["params"].items():
+            tab["params"][p] = _params_tables(
+                tab["size_arr"], p, pp["xcost"], pp["zcc"])
+        tab["merged"].clear()
+    merged = tab["merged"].get(params)
+    if merged is None:
+        per_params = tab["params"].get(params)
+        if per_params is None:
+            per_params = _params_tables(tab["size_arr"], params)
+            tab["params"][params] = per_params
+        merged = {**tab, **per_params}
+        tab["merged"][params] = merged
+    return merged
 
 
 def _terms_for_sizes(tab: dict, m_nb: np.ndarray,
@@ -909,7 +1025,9 @@ def execute_compiled(ct: CompiledTrace, mgr) -> None:
         _replay(ct, mgr, 0, len(ct))
 
 
-def _execute_svm(ct: CompiledTrace, mgr: SVMManager) -> None:
+def _zc_setup(mgr: SVMManager) -> tuple:
+    """(zc_mask, zc_key) for the manager's zero-copy configuration —
+    the per-execution preamble shared by `_execute_svm`/`execute_fused`."""
     zc_mask = zc_key = None
     if mgr.zero_copy_allocs:
         key = frozenset(mgr.zero_copy_allocs)
@@ -924,13 +1042,142 @@ def _execute_svm(ct: CompiledTrace, mgr: SVMManager) -> None:
             zc_key = key
         else:
             zc_mask = None
+    return zc_mask, zc_key
 
+
+def _execute_svm(ct: CompiledTrace, mgr: SVMManager) -> None:
+    zc_mask, zc_key = _zc_setup(mgr)
     pos = 0
     for b in ct.boundaries.tolist():
         _run_span(ct, mgr, pos, b, zc_mask, zc_key)
         _exec_boundary(ct, mgr, b)
         pos = b + 1
     _run_span(ct, mgr, pos, len(ct), zc_mask, zc_key)
+
+
+def _read_counters(mgr, out: np.ndarray, ci: int) -> None:
+    out[ci, 0] = mgr.wall
+    out[ci, 1] = mgr.n_migrations
+    out[ci, 2] = mgr.n_evictions
+    out[ci, 3] = mgr.bytes_migrated
+    out[ci, 4] = mgr.bytes_evicted
+
+
+def execute_fused(ct: CompiledTrace, mgr, cuts) -> np.ndarray:
+    """Execute ``ct`` exactly like `execute_compiled`, additionally
+    snapshotting the five attribution counters — wall clock, migrations,
+    evictions, bytes migrated, bytes evicted — after each op index in
+    ``cuts`` (sorted, ascending; typically a concatenated round's
+    ``seg_bounds[1:]``).  Returns a ``(len(cuts), 5)`` float64 array.
+
+    This is the fused-round entry point: a scheduler replays a whole
+    round's concatenated segments in **one** batched-interpreter pass and
+    attributes per-request deltas from the cut snapshots instead of N
+    manager round-trips.  The snapshots are byte-identical to reading the
+    manager between back-to-back `execute_compiled` calls at the same
+    boundaries: mid-span wall values come from the same exact `np.cumsum`
+    trajectory Phase B folds the wall with, and the count/byte columns
+    are integer prefix sums of Phase A's miss/victim streams.  SVM-only
+    (the UVM interpreter has no span sampling)."""
+    if type(mgr) is not SVMManager:
+        raise TypeError("execute_fused requires an SVMManager, got "
+                        f"{type(mgr).__name__}")
+    cuts = np.asarray(cuts, dtype=np.int64)
+    out = np.empty((len(cuts), 5))
+    zc_mask, zc_key = _zc_setup(mgr)
+    pos = 0
+    ci = 0
+    for b in ct.boundaries.tolist():
+        ci = _run_span_sampled(ct, mgr, pos, b, zc_mask, zc_key,
+                               cuts, out, ci)
+        _exec_boundary(ct, mgr, b)
+        pos = b + 1
+    ci = _run_span_sampled(ct, mgr, pos, len(ct), zc_mask, zc_key,
+                           cuts, out, ci)
+    while ci < len(cuts):          # cuts at (or past) the trace end
+        _read_counters(mgr, out, ci)
+        ci += 1
+    return out
+
+
+def _run_span_sampled(ct, mgr, s, e, zc_mask, zc_key, cuts, out, ci) -> int:
+    """`_run_span` plus counter snapshots at the ``cuts`` that land in
+    ``(s, e]`` (cuts ≤ s read the live manager directly — state is
+    current there).  Returns the index of the first unconsumed cut."""
+    n_cuts = len(cuts)
+    while ci < n_cuts and cuts[ci] <= s:
+        _read_counters(mgr, out, ci)
+        ci += 1
+    if e <= s:
+        return ci
+    hi = ci
+    while hi < n_cuts and cuts[hi] <= e:
+        hi += 1
+    if hi == ci:                   # no cuts in this span
+        _run_span(ct, mgr, s, e, zc_mask, zc_key)
+        return ci
+    if e - s < FAST_SPAN_MIN:
+        # short span: scalar replay split at the cut points — exact
+        p = s
+        for j in range(ci, hi):
+            c = int(cuts[j])
+            _replay(ct, mgr, p, c)
+            _read_counters(mgr, out, j)
+            p = c
+        _replay(ct, mgr, p, e)
+        return hi
+    pre = (mgr.wall, mgr.n_migrations, mgr.n_evictions,
+           mgr.bytes_migrated, mgr.bytes_evicted)
+    tab, struct, zc_pos, zc_rid = _span_phase_a(ct, mgr, s, e,
+                                                zc_mask, zc_key)
+    op_end = _phase_b(ct, mgr, s, e, tab, struct, zc_pos, zc_rid, zc_key)
+    _sample_cuts(tab, struct, pre, op_end, cuts[ci:hi], out[ci:hi], s)
+    return hi
+
+
+def _sample_cuts(tab, st: "SpanStruct", pre, op_end, cuts, out, s) -> None:
+    """Counter snapshots at in-span cut positions, from Phase B's wall
+    trajectory and integer prefix sums over Phase A's miss/victim
+    streams.  ``op_end[k]`` is the wall after relative op ``k`` — the
+    same float the scalar path's accumulator holds there — and every
+    count/byte column is an exact integer cumsum, so each sampled row
+    is byte-identical to a live manager read at that op boundary."""
+    out[:, 0] = op_end[cuts - s - 1]
+    m_pos = np.asarray(st.m_pos, dtype=np.int64)
+    M = len(m_pos)
+    if M == 0:
+        out[:, 1:] = pre[1:]
+        return
+    ks = np.searchsorted(m_pos, cuts, side="left")
+    out[:, 1] = pre[1] + ks
+    nev = np.asarray(st.nev, dtype=np.int64)
+    vend = np.concatenate(([0], np.cumsum(nev)))
+    if st.m_nbytes is not None:
+        m_nb = np.abs(np.asarray(st.m_nbytes, dtype=np.int64))
+    else:
+        m_nb = tab["size_arr"][np.asarray(st.m_rid, dtype=np.int64)]
+    cmb = np.concatenate(([0], np.cumsum(m_nb)))
+    out[:, 3] = pre[3] + cmb[ks]
+    if len(st.victims):
+        v_sz = tab["size_arr"][np.asarray(st.victims, dtype=np.int64)]
+        cvb = np.concatenate(([0], np.cumsum(v_sz)))
+    else:
+        cvb = np.zeros(1, dtype=np.int64)
+    ev = vend[ks]
+    ev_bytes = cvb[ev]
+    if st.pv_counts is not None:
+        pvc_cum = np.concatenate(
+            ([0], np.cumsum(np.asarray(st.pv_counts, dtype=np.int64))))
+        if st.pv_victims:
+            pv_sz = tab["size_arr"][np.asarray(st.pv_victims,
+                                               dtype=np.int64)]
+            pvb_cum = np.concatenate(([0], np.cumsum(pv_sz)))
+        else:
+            pvb_cum = np.zeros(1, dtype=np.int64)
+        ev = ev + pvc_cum[ks]
+        ev_bytes = ev_bytes + pvb_cum[pvc_cum[ks]]
+    out[:, 2] = pre[2] + ev
+    out[:, 4] = pre[4] + ev_bytes
 
 
 def _exec_boundary(ct: CompiledTrace, mgr, k: int) -> None:
@@ -989,6 +1236,16 @@ def _run_span(ct: CompiledTrace, mgr, s: int, e: int,
     if e - s < FAST_SPAN_MIN:
         _replay(ct, mgr, s, e)
         return
+    tab, struct, zc_pos, zc_rid = _span_phase_a(ct, mgr, s, e,
+                                                zc_mask, zc_key)
+    _phase_b(ct, mgr, s, e, tab, struct, zc_pos, zc_rid, zc_key)
+
+
+def _span_phase_a(ct: CompiledTrace, mgr, s: int, e: int, zc_mask, zc_key):
+    """Phase-A dispatch for one vectorisable span: resolve the span's
+    hit/miss/victim structure (mutating residency/policy state) and hand
+    back everything Phase B needs.  Returns (tab, struct, zc_pos, zc_rid).
+    """
     tpos, trid, tpos_np, trid_np, uniq, zc_pos, zc_rid = \
         ct.span(s, e, zc_mask, zc_key)
     tab = _tables(mgr.space, mgr.params)
@@ -1042,14 +1299,21 @@ def _run_span(ct: CompiledTrace, mgr, s: int, e: int,
             if defer_on or pw > 0.0:
                 struct = _phase_a_var(mgr, tpos, trid, tab)
             elif type(mgr.policy) is LRF:
-                struct = _phase_a_lrf(mgr, tpos, trid, tab)
+                if mgr.pinned:
+                    # pinned ranges disable the bitmap fast paths above;
+                    # the heap variant skips hit runs instead of walking
+                    # every touch (scheduler spans are hit-dominated)
+                    struct = _phase_a_lrf_runs(ct, mgr, s, e, zc_key,
+                                               tpos_np, trid_np, tab)
+                else:
+                    struct = _phase_a_lrf(mgr, tpos, trid, tab)
             else:
                 struct = _phase_a_generic(mgr, tpos, trid, tab)
         except RuntimeError:
             _restore(mgr, snap)
             _replay(ct, mgr, s, e)    # re-raises at the same op, scalar
             raise                     # unreachable: replay must raise too
-    _phase_b(ct, mgr, s, e, tab, struct, zc_pos, zc_rid, zc_key)
+    return tab, struct, zc_pos, zc_rid
 
 
 # ------------------------------------------------------ phase A — structure
@@ -1221,6 +1485,77 @@ def _phase_a_lrf(mgr, tpos, trid, tab):
         mp(tpos[i])
         ma(rid)
         na(n_victims)
+    mgr.free = free
+    nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
+    return SpanStruct(miss_pos, miss_rid, nev, victims)
+
+
+def _phase_a_lrf_runs(ct, mgr, s, e, zc_key, tpos_np, trid_np, tab):
+    """Heap-of-next-touches Phase A for LRF spans with pinned ranges.
+
+    `_phase_a_lrf` walks every touch; on scheduler spans with pinned hot
+    leaves almost all touches are hits, and an LRF hit is a no-op.  This
+    variant visits only the misses: a min-heap keyed by span-local touch
+    ordinal holds, for each non-resident rid with a future touch, its
+    next touch.  A pop is always a miss (rids become resident only via
+    pops, victims are re-pushed at their next future touch), and pops are
+    strictly increasing in ordinal, so the miss/victim stream — and every
+    state mutation — is identical to the sequential walk.
+    """
+    n = len(trid_np)
+    if n == 0:
+        return SpanStruct([], [], _EMPTY_I, [])
+    key = ("runs", s, e, zc_key)
+    positions = ct.span_cache.get(key)
+    if positions is None:         # rid -> ascending touch ordinals
+        order = np.argsort(trid_np, kind="stable")
+        srid = trid_np[order]
+        bounds = np.concatenate(
+            ([0], np.nonzero(srid[1:] != srid[:-1])[0] + 1, [n]))
+        positions = {int(srid[a]): order[a:b]
+                     for a, b in zip(bounds[:-1], bounds[1:])}
+        ct.span_cache[key] = positions
+    resident = mgr.resident
+    heap = [(int(fi[0]), rid) for rid, fi in positions.items()
+            if rid not in resident]
+    heapq.heapify(heap)
+    q = mgr.policy._q
+    popitem = q.popitem
+    res_add = resident.add
+    res_disc = resident.discard
+    pinned = mgr.pinned
+    sizes = tab["sizes"]
+    free = mgr.free
+    miss_pos: list[int] = []
+    miss_rid: list[int] = []
+    vends: list[int] = []
+    victims: list[int] = []
+    n_victims = 0
+    while heap:
+        i, rid = heapq.heappop(heap)
+        nbytes = sizes[rid]
+        while free < nbytes:
+            if not q:
+                raise RuntimeError(
+                    "SVM: device full of pinned/unevictable ranges "
+                    f"(free={free}, need more; pinned={len(pinned)})")
+            victim, _ = popitem(False)
+            res_disc(victim)
+            free += sizes[victim]
+            victims.append(victim)
+            n_victims += 1
+            vpos = positions.get(victim)
+            if vpos is not None:
+                k = int(np.searchsorted(vpos, i, side="right"))
+                if k < len(vpos):
+                    heapq.heappush(heap, (int(vpos[k]), victim))
+        free -= nbytes
+        res_add(rid)
+        if rid not in pinned:
+            q[rid] = 0.0
+        miss_pos.append(int(tpos_np[i]))
+        miss_rid.append(rid)
+        vends.append(n_victims)
     mgr.free = free
     nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
     return SpanStruct(miss_pos, miss_rid, nev, victims)
@@ -1469,13 +1804,15 @@ def _nev_from_pairs(vend_pairs, n_miss):
 # ----------------------------------------------------- phase B — accounting
 
 def _phase_b(ct, mgr, s, e, tab, st: SpanStruct, zc_pos, zc_rid,
-             zc_key=None) -> None:
+             zc_key=None) -> np.ndarray:
+    """Float accounting for one span.  Returns the per-op wall trajectory
+    ``op_end`` (``op_end[k]`` = mgr.wall after relative op ``k``) so the
+    fused-round path can sample mid-span cut points exactly."""
     if (len(zc_pos) == 0 and st.m_nbytes is None
             and (st.pv_counts is None or not any(st.pv_counts))):
-        _phase_b_fast(ct, mgr, s, e, tab, st.m_pos, st.m_rid, st.nev,
-                      st.victims, st.lastpos)
-    else:
-        _phase_b_general(ct, mgr, s, e, tab, st, zc_pos, zc_rid, zc_key)
+        return _phase_b_fast(ct, mgr, s, e, tab, st.m_pos, st.m_rid,
+                             st.nev, st.victims, st.lastpos)
+    return _phase_b_general(ct, mgr, s, e, tab, st, zc_pos, zc_rid, zc_key)
 
 
 def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
@@ -1501,7 +1838,7 @@ def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
                 for rid, k in lastpos.items():
                     if rid in q:
                         q[rid] = float(traj[k - s + 1])
-        return
+        return traj[1:]
 
     m_pos = np.asarray(miss_pos, dtype=np.int64)
     m_rid = np.asarray(miss_rid, dtype=np.int64)
@@ -1515,18 +1852,19 @@ def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
     ec_v = tab["ecs"][sizeidx[v_rid]] if len(v_rid) else np.zeros(0)
 
     # fold eviction costs into each migration's alloc term, preserving the
-    # scalar path's per-eviction add order (0/1 evictions vectorised)
+    # scalar path's per-eviction add order: iterate over the eviction
+    # ordinal (all first evictions, then all seconds, ...) so each miss's
+    # accumulator sees the same left-to-right add chain, vectorised across
+    # misses instead of a Python double loop
     alloc = t3.copy()
     ends = np.cumsum(m_nev)
     starts = ends - m_nev
-    one = m_nev == 1
-    if one.any():
-        alloc[one] = t3[one] + ec_v[starts[one]]
-    for i in np.nonzero(m_nev > 1)[0].tolist():
-        a = alloc[i]
-        for j in range(starts[i], ends[i]):
-            a += ec_v[j]
-        alloc[i] = a
+    if len(ec_v):
+        sel = np.nonzero(m_nev > 0)[0]
+        for j in range(int(m_nev.max())):
+            if j:
+                sel = sel[m_nev[sel] > j]
+            alloc[sel] += ec_v[starts[sel] + j]
     total = (((t1 + t2) + alloc) + t4) + t5
 
     if mgr.parallel_evict:
@@ -1534,13 +1872,12 @@ def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
         # migration (plus lock/rollback overhead)
         base = (((t1 + t2) + t3) + t4) + t5
         evw = np.zeros(M)
-        if one.any():
-            evw[one] = ec_v[starts[one]]
-        for i in np.nonzero(m_nev > 1)[0].tolist():
-            a = 0.0
-            for j in range(starts[i], ends[i]):
-                a += ec_v[j]
-            evw[i] = a
+        if len(ec_v):
+            sel = np.nonzero(m_nev > 0)[0]
+            for j in range(int(m_nev.max())):
+                if j:
+                    sel = sel[m_nev[sel] > j]
+                evw[sel] += ec_v[starts[sel] + j]
         total = np.where(m_nev > 0, np.maximum(base, evw) + 5e-6, base)
 
     # wall trajectory over the whole span (compute ops interleave misses;
@@ -1616,6 +1953,7 @@ def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
     if mgr.profile:
         _emit_profile(ct, mgr, s, tab, traj, m_pos, miss_rid_l, starts, ends,
                       victims, dup, trig)
+    return traj[1:]
 
 
 def _synth_dup(ct, mgr, m_pos, nmig0, M):
@@ -1681,26 +2019,23 @@ def _phase_b_general(ct, mgr, s, e, tab, st: SpanStruct,
         alloc = t3.copy()
         ends = np.cumsum(m_nev)
         starts = ends - m_nev
-        one = m_nev == 1
-        if one.any():
-            alloc[one] = t3[one] + ec_v[starts[one]]
-        for i in np.nonzero(m_nev > 1)[0].tolist():
-            a = alloc[i]
-            for j in range(starts[i], ends[i]):
-                a += ec_v[j]
-            alloc[i] = a
+        if len(ec_v):
+            sel = np.nonzero(m_nev > 0)[0]
+            for j in range(int(m_nev.max())):
+                if j:
+                    sel = sel[m_nev[sel] > j]
+                alloc[sel] += ec_v[starts[sel] + j]
         total = (((t1 + t2) + alloc) + t4) + t5
 
         if mgr.parallel_evict:
             base = (((t1 + t2) + t3) + t4) + t5
             evw = np.zeros(M)
-            if one.any():
-                evw[one] = ec_v[starts[one]]
-            for i in np.nonzero(m_nev > 1)[0].tolist():
-                a = 0.0
-                for j in range(starts[i], ends[i]):
-                    a += ec_v[j]
-                evw[i] = a
+            if len(ec_v):
+                sel = np.nonzero(m_nev > 0)[0]
+                for j in range(int(m_nev.max())):
+                    if j:
+                        sel = sel[m_nev[sel] > j]
+                    evw[sel] += ec_v[starts[sel] + j]
             total = np.where(m_nev > 0, np.maximum(base, evw) + 5e-6, base)
         deltas[m_rel] = total
 
@@ -1851,6 +2186,7 @@ def _phase_b_general(ct, mgr, s, e, tab, st: SpanStruct,
         _emit_profile_general(ct, mgr, s, tab, st, zc_pos, zc_rid,
                               op_start, op_end, w_mid, pv_event_wall,
                               dup, trig)
+    return op_end
 
 
 def _emit_profile(ct, mgr, s, tab, traj, m_pos, miss_rid, starts, ends,

@@ -126,6 +126,27 @@ def trace_key(point: SweepPoint, base: int = BASE,
             point.capacity, base, max_ops)
 
 
+def hotset_grid(total_bytes: int, capacities: Sequence[int], *,
+                policies: Sequence[str] = ("lrf",),
+                modes: Sequence[str] = ("static", "dynamic",
+                                        "oscillating"),
+                ops: int = 4096, seed: int = 0,
+                **hot_kwargs) -> "list[SweepPoint]":
+    """Scenario grid over the synthetic hot-set adversaries
+    (`repro.core.traces.HotSet`): mode × capacity × eviction policy.
+
+    Each mode shares one `trace_key` per capacity-independent axis, so
+    `run_sweep` compiles three traces and replays them across the whole
+    grid — the cheap way to stress phase-change behaviour alongside the
+    Table-2 suite."""
+    return [
+        SweepPoint.make("hotset", total_bytes, cap, policy=pol,
+                        wl_kwargs={"mode": mode, "ops": ops, "seed": seed,
+                                   **hot_kwargs})
+        for mode in modes for cap in capacities for pol in policies
+    ]
+
+
 def run_point(point: SweepPoint, params: CostParams = MI250X, *,
               trace_cache=True) -> dict:
     """Execute one sweep point; returns the flat result row.

@@ -622,6 +622,104 @@ class Gesummv(Workload):
         return float(self.A.size + self.B.size)
 
 
+class HotSet(Workload):
+    """Seeded synthetic hot-set trace (cache-algorithm-simulator style):
+    random touches over one allocation where a ``hot_frac`` window of the
+    ranges receives ``hot_prob`` of the accesses.
+
+    ``mode``:
+
+      * ``static``      — one hot window for the whole trace (the
+                          baseline every eviction policy should ace),
+      * ``dynamic``      — the window jumps to a fresh seeded-random
+                          position each phase (working-set drift),
+      * ``oscillating``  — the window ping-pongs between two fixed
+                          positions each phase: the phase-change
+                          adversary for schedulers and fused rounds
+                          (every flip invalidates the resident hot set).
+
+    The full touch sequence is drawn **once** with a seeded generator and
+    shared by ``trace()`` and ``emit_columns`` — generator-vs-columnar
+    parity holds by construction (and is tested).  One kernel marker and
+    one compute op per phase."""
+
+    name = "hotset"
+    concurrency = 32
+    MODES = ("static", "dynamic", "oscillating")
+
+    def __init__(self, total_bytes: int, mode: str = "static",
+                 hot_frac: float = 0.125, hot_prob: float = 0.9,
+                 phases: int = 8, ops: int = 4096, seed: int = 0):
+        super().__init__(total_bytes)
+        if mode not in self.MODES:
+            raise ValueError(f"unknown hot-set mode {mode!r}; "
+                             f"available: {self.MODES}")
+        self.mode = mode
+        self.name = f"hotset-{mode}"
+        self.hot_frac = hot_frac
+        self.hot_prob = hot_prob
+        self.phases = max(1, int(phases)) if mode != "static" else 1
+        self.ops = int(ops)
+        self.seed = seed
+        self._seq: tuple | None = None
+
+    def build(self, space: AddressSpace) -> None:
+        self.data = space.alloc(self.total_bytes, "data")
+
+    def _sequence(self, space: AddressSpace):
+        """(touch rids, phase op bounds, per-phase compute seconds) —
+        drawn once, then shared by both trace tiers."""
+        if self._seq is not None:
+            return self._seq
+        rids = _rid_arr(space, self.data)
+        n = len(rids)
+        rng = np.random.default_rng(self.seed)
+        nhot = max(1, int(round(n * self.hot_frac)))
+        if self.mode == "static":
+            starts = np.array([int(rng.integers(n))], dtype=np.int64)
+        elif self.mode == "dynamic":
+            starts = rng.integers(0, n, size=self.phases).astype(np.int64)
+        else:                              # oscillating: ping-pong
+            a, b = 0, n // 2
+            starts = np.array(
+                [a if p % 2 == 0 else b for p in range(self.phases)],
+                dtype=np.int64)
+        per = math.ceil(self.ops / self.phases)
+        pidx = np.minimum(np.arange(self.ops) // per, self.phases - 1)
+        hot = rng.random(self.ops) < self.hot_prob
+        cold_pos = rng.integers(0, n, size=self.ops)
+        hot_off = rng.integers(0, nhot, size=self.ops)
+        pos = np.where(hot, (starts[pidx] + hot_off) % n, cold_pos)
+        seq = rids[pos]
+        bounds = np.minimum(np.arange(self.phases + 1) * per, self.ops)
+        sz = _sizes(space)
+        comp = np.array([float(sz[seq[a:b]].sum()) / HBM_BW
+                         for a, b in zip(bounds[:-1], bounds[1:])])
+        self._seq = (seq, bounds, comp)
+        return self._seq
+
+    def trace(self, space: AddressSpace) -> Iterator[Op]:
+        seq, bounds, comp = self._sequence(space)
+        conc = self.concurrency
+        for p in range(len(bounds) - 1):
+            yield ("kernel", f"hotset_p{p}")
+            for rid in seq[bounds[p]:bounds[p + 1]].tolist():
+                yield ("touch", rid, conc, 0)
+            yield ("compute", comp[p])
+
+    def emit_columns(self, space: AddressSpace) -> CompiledTrace:
+        em = ColumnEmitter()
+        seq, bounds, comp = self._sequence(space)
+        for p in range(len(bounds) - 1):
+            em.kernel()
+            em.touches(seq[bounds[p]:bounds[p + 1]], self.concurrency)
+            em.compute(comp[p])
+        return em.finish()
+
+    def work_units(self) -> float:
+        return float(self.ops)
+
+
 WORKLOADS: dict[str, type[Workload]] = {
     "stream": Stream,
     "conv2d": Conv2d,
@@ -631,6 +729,7 @@ WORKLOADS: dict[str, type[Workload]] = {
     "syr2k": Syr2k,
     "mvt": Mvt,
     "gesummv": Gesummv,
+    "hotset": HotSet,
 }
 
 

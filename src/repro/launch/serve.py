@@ -6,11 +6,13 @@
 With ``--svm-budget-frac`` the decode loop additionally rides the SVM
 weight-streaming runtime: the model's parameter leaves are planned into
 managed ranges against a device pool of the given fraction of total param
-bytes, and every decoded token replays the per-token layer-fetch trace
-through the compiled-session engine (`StreamingExecutor.decode_step` —
-recorded and compiled on the first token, cached-segment replays after),
-reporting the simulated streaming wall clock, migration/eviction traffic,
-and session cache stats next to the real tok/s.
+bytes, and the whole decode's layer-fetch trace replays through the
+compiled-session engine in one fused pass (`StreamingExecutor.
+decode_steps` — the per-token segment records and compiles once, then all
+N tokens execute as a single concatenated mega-trace; prefetch mode falls
+back to per-token `decode_step` replays), reporting the simulated
+streaming wall clock, migration/eviction traffic, and session cache stats
+next to the real tok/s.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --svm-budget-frac 0.6 --svm-mode svm_aware
@@ -96,6 +98,14 @@ class WeightStream:
         self.executor.decode_step(self.layer_paths, self.flops,
                                   materialize=False)
 
+    def steps(self, n: int) -> None:
+        """Fused multi-token accounting: all ``n`` decode steps replay as
+        one concatenated segment in a single batched engine pass
+        (`decode_steps`; prefetch mode falls back to the per-token
+        loop)."""
+        self.executor.decode_steps(self.layer_paths, self.flops, n,
+                                   materialize=False)
+
     def report(self, decoded: int) -> str:
         m = self.executor.metrics()
         return (
@@ -130,7 +140,8 @@ def decode_tokens(cfg, serve_step, params, tok, cache, ctx, steps: int):
 
 
 def schedule_report(r: dict) -> str:
-    """Two-line human summary of a `run_schedule` result dict."""
+    """Three-line human summary of a `run_schedule` result dict."""
+    sc = r["shared_cache"]
     return (
         f"svm sched[{r['policy']}]: {r['n_requests']} reqs, "
         f"offered DOS {r['dos_offered']:.0f}% "
@@ -143,7 +154,13 @@ def schedule_report(r: dict) -> str:
         f"(e2m {r['evict_to_mig']:.2f}, "
         f"{r['evictions_per_token']:.2f} ev/tok), "
         f"segment hit rate {r['segment_hit_rate'] * 100:.1f}% "
-        f"({r['segment_shared_hits']} cross-request replays)")
+        f"({r['segment_shared_hits']} cross-request replays)\n"
+        f"  shared cache: {sc['shared_segments']} segments, "
+        f"{sc['shared_lookup_hits']} hits / "
+        f"{sc['shared_lookup_misses']} misses, "
+        f"{sc['shared_relocations']} relocations, "
+        f"{sc['shared_concats']} round concats "
+        f"({'fused' if r.get('fused') else 'per-token'} replay)")
 
 
 def main() -> None:
@@ -218,8 +235,7 @@ def main() -> None:
         # the streaming accounting is a pure function of the token count:
         # replay it outside the timed loop so tok/s stays the real number
         if stream is not None:
-            for _ in range(args.decode):
-                stream.step()
+            stream.steps(args.decode)
 
     seq = jnp.concatenate(outs, axis=1)
     print(f"prefill {args.batch}x{args.prompt_len} in {t_pre*1e3:.1f}ms; "

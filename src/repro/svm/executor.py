@@ -38,7 +38,7 @@ clock, so recorded `Event.t` timestamps stay monotonic.
 
 from __future__ import annotations
 
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable, Sequence
 
 import jax
@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
-from repro.core.engine import TraceSession
+from repro.core.engine import CompiledTrace, TraceSession
 from repro.svm.planner import ParamRanges, plan_param_ranges
 
 PyTree = Any
@@ -127,6 +127,11 @@ class StreamingExecutor:
         self.mgr.add_evict_listener(self._pending_evictions.append)
         # double-buffered next-layer prefetch queue
         self._prefetch_q: deque[tuple[str, float]] = deque()
+        # fused multi-token replay: memoised concatenation of one step
+        # segment repeated N times (`decode_steps`); identity-keyed with
+        # a strong segment ref so the id stays valid while memoised
+        self._steps_memo: "OrderedDict[tuple, CompiledTrace]" = \
+            OrderedDict()
         # instrumentation: units of invalidation work done by fetches
         # (range touches + evicted-leaf drops); regression-tested to be
         # O(ranges of fetched leaf + actual evictions), not O(all leaves)
@@ -302,6 +307,75 @@ class StreamingExecutor:
                        for paths in layer_paths for p in paths)
             self._step_scan[paths_sig] = scan
         self.fetch_scan_work += scan
+        self._drain_evictions()
+        if materialize:
+            for paths in layer_paths:
+                for p in paths:
+                    if p not in self._device and self._leaf_resident(p):
+                        self._device[p] = jnp.asarray(self._flat[p])
+
+    def decode_steps(self, layer_paths: Sequence[Sequence[str]],
+                     flops: Sequence[float], steps: int, *,
+                     materialize: bool = True) -> None:
+        """Replay ``steps`` identical decode steps in one fused pass.
+
+        The per-token segment (same cache key as `decode_step`'s
+        non-prefetch path) is fetched once and concatenated ``steps``
+        times into a mega-trace — segment replays resume from the
+        manager's live state, so back-to-back replay and concatenated
+        replay are bit-identical (`TraceSession` contract) — then
+        executed in a single batched-interpreter pass: one span walk for
+        the whole token run instead of ``steps`` engine round-trips.
+
+        Prefetch mode interleaves per-leaf overlap ledgering between
+        segments and the scalar session is the op-for-op golden
+        reference, so both fall back to the `decode_step` loop."""
+        if steps <= 0:
+            return
+        if self.prefetch or self.session.scalar or steps == 1:
+            for _ in range(steps):
+                self.decode_step(layer_paths, flops,
+                                 materialize=materialize)
+            return
+        n = len(layer_paths)
+        rate = self.compute_rate
+        secs = tuple(f / rate for f in flops)
+        paths_sig = tuple(map(tuple, layer_paths))
+        key = self._key(("step", paths_sig, secs))
+
+        def rec(s):
+            for i in range(n):
+                for p in layer_paths[i]:
+                    self._record_leaf(p)
+                s.compute(secs[i])
+
+        ct = self.session.fetch(key, rec)
+        mkey = (id(ct), int(steps))
+        hit = self._steps_memo.get(mkey)
+        if hit is not None and hit[0] is ct:
+            self._steps_memo.move_to_end(mkey)
+            mega = hit[1]
+        else:
+            segs = [ct] * steps
+            mega = (self.session.shared_cache.concat(segs)
+                    if self.session.shared_cache is not None
+                    else CompiledTrace.concat(segs))
+            self._steps_memo[mkey] = (ct, mega)
+            while len(self._steps_memo) > 8:
+                self._steps_memo.popitem(last=False)
+        self.session.replay(mega)
+        # account the fused pass as the per-step loop would: `steps`
+        # segment replays (ops_replayed already covers the mega length)
+        self.session.segments_replayed += steps - 1
+        self.compute_flops += float(sum(flops)) * steps
+        scan = self._step_scan.get(paths_sig)
+        if scan is None:
+            if len(self._step_scan) >= 256:
+                self._step_scan.clear()
+            scan = sum(len(self.plan.leaf_ranges[p])
+                       for paths in layer_paths for p in paths)
+            self._step_scan[paths_sig] = scan
+        self.fetch_scan_work += scan * steps
         self._drain_evictions()
         if materialize:
             for paths in layer_paths:

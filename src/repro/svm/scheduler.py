@@ -51,12 +51,19 @@ seed."""
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import functools
+from collections import OrderedDict, deque
 from typing import Any, Sequence
 
 import numpy as np
 
-from repro.core import AddressSpace, SVMManager, SegmentCache, TraceSession
+from repro.core import (
+    AddressSpace,
+    SVMManager,
+    SegmentCache,
+    TraceSession,
+    execute_fused,
+)
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
 from repro.core.ranges import DEFAULT_BASE
 from repro.svm.planner import ParamRanges, plan_leaf_ranges
@@ -80,9 +87,23 @@ class ModelSpec:
     layer_paths: tuple[tuple[str, ...], ...]     # per-layer leaf groups
     flops_per_layer: tuple[float, ...]
 
-    @property
+    @functools.cached_property
     def total_bytes(self) -> int:
+        # cached: `_fits` reads this on every admission probe (cached_
+        # property writes the instance __dict__ directly, which a frozen
+        # dataclass permits; equality/hash stay field-based)
         return sum(n for _, n in self.leaves)
+
+    def __hash__(self) -> int:
+        # specs key every segment-cache lookup (twice per token); the
+        # generated dataclass hash re-walks the leaf/path tuples each
+        # call, so memoise it (same __dict__ side door as total_bytes)
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.arch, self.leaves, self.layer_paths,
+                      self.flops_per_layer))
+            self.__dict__["_hash"] = h
+        return h
 
     @property
     def hot_leaf(self) -> tuple[str, int]:
@@ -238,7 +259,8 @@ class PoolScheduler:
                  cost_params: CostParams = TPU_V5E_HOST,
                  admit_watermark: float = 1.0, pin_frac: float = 0.25,
                  concurrency: int = 64, compute_rate: float | None = None,
-                 scalar: bool = False, base: int = DEFAULT_BASE,
+                 scalar: bool = False, fused: bool = True,
+                 base: int = DEFAULT_BASE,
                  segment_cache_size: int = 512):
         if policy not in POLICIES:
             raise ValueError(f"unknown scheduling policy {policy!r}; "
@@ -255,6 +277,13 @@ class PoolScheduler:
         self.compute_rate = (compute_rate if compute_rate is not None
                              else cost_params.serve_flops)
         self.scalar = scalar
+        # fused round replay: one concatenated mega-trace per scheduler
+        # round, executed in a single batched-interpreter pass with
+        # per-request attribution sampled at the segment cuts.  Byte-
+        # identical to the per-token loop; ``fused=False`` (and scalar
+        # mode, which has no batched interpreter) keep the golden
+        # reference path.
+        self.fused = bool(fused) and not scalar
         self.now = 0.0
         self.admitted_bytes = 0
         self.peak_admitted_bytes = 0
@@ -262,6 +291,10 @@ class PoolScheduler:
         self._admit_seq = 0
         self._geometry: dict[ModelSpec, tuple] = {}
         self._sessions: list[TraceSession] = []
+        # round-shape memo: identical segment tuples (by identity — the
+        # per-session LRUs hand back the same relocated objects every
+        # steady-state round) reuse one concatenated mega-trace
+        self._concat_memo: "OrderedDict[tuple, tuple]" = OrderedDict()
 
     # -------------------------------------------------------- admission
 
@@ -351,21 +384,165 @@ class PoolScheduler:
         req.bytes_evicted += m.bytes_evicted - be0
         self.now += m.wall - w0
 
-    def _decode_token(self, req: Request) -> None:
-        spec, rate, conc = req.spec, self.compute_rate, self.concurrency
-        key = ("tok", spec)
+    def _record_token(self, session: TraceSession, spec: ModelSpec,
+                      plan: ParamRanges) -> None:
+        """Record one decode token's layer-fetch ops into ``session``."""
+        rate, conc = self.compute_rate, self.concurrency
+        for paths, fl in zip(spec.layer_paths, spec.flops_per_layer):
+            for p in paths:
+                for rid in plan.leaf_ranges[p]:
+                    session.touch(rid, concurrency=conc)
+            session.compute(fl / rate)
 
-        def rec(s, plan=req.plan):
-            for paths, fl in zip(spec.layer_paths, spec.flops_per_layer):
-                for p in paths:
-                    for rid in plan.leaf_ranges[p]:
-                        s.touch(rid, concurrency=conc)
-                s.compute(fl / rate)
+    def _decode_token(self, req: Request) -> None:
+        key = ("tok", req.spec)
+
+        def rec(s, spec=req.spec, plan=req.plan):
+            self._record_token(s, spec, plan)
 
         self._replay_attributed(req, lambda: req.session.run(key, rec))
         req.tokens_done += 1
         if req.tokens_done == 1:
             req.first_token_s = self.now
+
+    # ---------------------------------------------------- fused round tier
+
+    def _fetch_segments(self, block: list[Request]) -> list:
+        """Resolve every block member's next-token compiled segment
+        without replaying: per-session LRU hits first, then **one**
+        shared-cache probe per distinct key (`SegmentCache.batch_relocate`
+        rebased to every member's rid base at once), recording only on
+        the first-ever encounter of a key.  Session/shared counter totals
+        match the sequential per-token `TraceSession.fetch` chain."""
+        segs: list = [None] * len(block)
+        groups: "OrderedDict[object, list]" = OrderedDict()
+        for k, req in enumerate(block):
+            key = ("tok", req.spec)
+            ct = req.session.get(key)
+            if ct is not None:
+                req.session.cache_hits += 1
+                segs[k] = ct
+            else:
+                groups.setdefault(key, []).append((k, req))
+        for key, members in groups.items():
+            cts = self.shared_cache.batch_relocate(
+                key, [req.plan.rid_base for _, req in members])
+            if cts is None:
+                # first encounter: the head records + publishes, the rest
+                # re-probe as shared hits (same counters as sequentially)
+                k0, r0 = members[0]
+                sess = r0.session
+                sess.cache_misses += 1
+                self._record_token(sess, r0.spec, r0.plan)
+                ct0 = sess.seal(key)
+                self.shared_cache.put(key, r0.plan.rid_base, ct0)
+                segs[k0] = ct0
+                members = members[1:]
+                if not members:
+                    continue
+                cts = self.shared_cache.batch_relocate(
+                    key, [req.plan.rid_base for _, req in members])
+            for (k, req), ct in zip(members, cts):
+                req.session.shared_hits += 1
+                req.session._cache_put(key, ct)
+                segs[k] = ct
+        return segs
+
+    def _concat_round(self, segs: list) -> "Any":
+        """Memoised `SegmentCache.concat` over the block's segment tuple.
+        Keyed by object identity; the memo holds strong references, so a
+        key can never alias a freed segment."""
+        key = tuple(id(ct) for ct in segs)
+        ent = self._concat_memo.get(key)
+        if ent is not None:
+            self._concat_memo.move_to_end(key)
+            return ent[1]
+        mega = self.shared_cache.concat(segs)
+        self._concat_memo[key] = (tuple(segs), mega)
+        while len(self._concat_memo) > 16:
+            self._concat_memo.popitem(last=False)
+        return mega
+
+    def _run_round_fused(self, order: list[Request], waiting,
+                         queued: "deque[Request]", active: list[Request],
+                         done: list[Request], ingest) -> None:
+        """One scheduler round as fused blocks.
+
+        A block is a maximal run of ``order`` whose segments may replay
+        back-to-back with **no interleaved manager mutation**: it ends at
+        a finishing request (its retirement unpins ranges and admits
+        queued tenants — both mutate policy state for later segments) and,
+        under ``svm_aware`` with arrivals still pending, every block is
+        unit-sized (a mid-round admission pins at a wall-dependent
+        position).  fifo/admission mid-round admissions never touch the
+        manager, so they replay their bookkeeping inside the attribution
+        loop at the exact per-token clock."""
+        i, n = 0, len(order)
+        while i < n:
+            req = order[i]
+            if req.tokens_done >= req.n_tokens:
+                # zero-token (or raced-complete) request: retire without
+                # a decode — and, as in the per-token loop, without the
+                # post-token ingest/admit step
+                self._retire(req, active, done)
+                i += 1
+                continue
+            block: list[Request] = []
+            j = i
+            while j < n:
+                r = order[j]
+                if r.tokens_done >= r.n_tokens:
+                    break
+                block.append(r)
+                j += 1
+                if r.tokens_done + 1 >= r.n_tokens:
+                    break              # finisher: retire/admit next
+                if self.policy == "svm_aware" and waiting:
+                    break              # pending arrivals may pin mid-round
+            self._run_block_fused(block, queued, active, done, ingest)
+            i = j
+
+    def _run_block_fused(self, block: list[Request],
+                         queued: "deque[Request]", active: list[Request],
+                         done: list[Request], ingest) -> None:
+        """Replay one block's concatenated segments in a single
+        `execute_fused` pass and attribute the per-request counter deltas
+        from the sampled cut rows — the same floats/ints the per-token
+        loop reads from the manager between replays."""
+        segs = self._fetch_segments(block)
+        if len(segs) == 1:
+            mega = segs[0]
+            cuts = np.array([len(mega)], dtype=np.int64)
+        else:
+            mega = self._concat_round(segs)
+            cuts = mega.seg_bounds[1:]
+        m = self.mgr
+        prev_w = m.wall
+        prev_c = [m.n_migrations, m.n_evictions,
+                  m.bytes_migrated, m.bytes_evicted]
+        snaps = execute_fused(mega, m, cuts)
+        walls = snaps[:, 0].tolist()
+        counts = snaps[:, 1:].astype(np.int64).tolist()
+        for k, req in enumerate(block):
+            w, c = walls[k], counts[k]
+            dw = w - prev_w
+            req.svm_wall_s += dw
+            req.migrations += c[0] - prev_c[0]
+            req.evictions += c[1] - prev_c[1]
+            req.bytes_migrated += c[2] - prev_c[2]
+            req.bytes_evicted += c[3] - prev_c[3]
+            self.now += dw
+            prev_w, prev_c = w, c
+            sess = req.session
+            sess.segments_replayed += 1
+            sess.ops_replayed += len(segs[k])
+            req.tokens_done += 1
+            if req.tokens_done == 1:
+                req.first_token_s = self.now
+            if req.tokens_done >= req.n_tokens:
+                self._retire(req, active, done)
+            ingest()
+            self._admit(queued, active)
 
     def _retire(self, req: Request, active: list[Request],
                 done: list[Request]) -> None:
@@ -405,6 +582,10 @@ class PoolScheduler:
                 # pool idle until the next arrival
                 self.now = max(self.now, waiting[0].arrival_s)
                 continue
+            if self.fused:
+                self._run_round_fused(self._round_order(active), waiting,
+                                      queued, active, done, ingest)
+                continue
             for req in self._round_order(active):
                 if req.tokens_done >= req.n_tokens:
                     # zero-token (or raced-complete) request: retire it
@@ -440,6 +621,7 @@ class PoolScheduler:
         lookups = seg_local_hits + seg_shared_hits + seg_misses
         return {
             "policy": self.policy,
+            "fused": self.fused,
             "capacity_bytes": self.capacity,
             "n_requests": len(done),
             "total_tokens": total_tokens,

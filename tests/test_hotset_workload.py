@@ -1,0 +1,81 @@
+"""Synthetic hot-set workloads (`repro.core.traces.HotSet`): seeded
+static / dynamic / oscillating access adversaries, generator-vs-columnar
+parity, and their sweep-grid integration (`repro.core.sweep.hotset_grid`)."""
+
+import numpy as np
+import pytest
+
+from repro.core import MB, AddressSpace
+from repro.core.engine import compile_trace
+from repro.core.sweep import hotset_grid, run_point
+from repro.core.traces import HotSet, make_workload
+
+TOTAL = 64 * MB
+
+
+def _space():
+    return AddressSpace(128 * MB, alignment=2 * MB)
+
+
+COLS = ("codes", "rids", "concs", "hints", "fargs", "boundaries")
+
+
+@pytest.mark.parametrize("mode", HotSet.MODES)
+def test_generator_columnar_parity(mode):
+    """The tier contract every Table-2 workload honours: columnar
+    emission is op-for-op identical to generator lowering."""
+    wl = make_workload("hotset", TOTAL, mode=mode, ops=2048, seed=5)
+    space = _space()
+    wl.build(space)
+    ct_gen = compile_trace(wl.trace(space))
+    ct_col = wl.emit_columns(space)
+    for f in COLS:
+        assert np.array_equal(getattr(ct_gen, f), getattr(ct_col, f)), f
+    assert ct_gen.n_ops == ct_col.n_ops
+
+
+def test_seeded_determinism():
+    def cols(seed):
+        wl = HotSet(TOTAL, mode="dynamic", ops=1024, seed=seed)
+        space = _space()
+        wl.build(space)
+        return wl.emit_columns(space)
+
+    assert np.array_equal(cols(3).rids, cols(3).rids)
+    assert not np.array_equal(cols(3).rids, cols(4).rids)
+
+
+def test_mode_validation_and_naming():
+    with pytest.raises(ValueError):
+        HotSet(TOTAL, mode="wobbling")
+    assert HotSet(TOTAL, mode="oscillating").name == "hotset-oscillating"
+    # static collapses to a single phase regardless of the phases arg
+    assert HotSet(TOTAL, mode="static", phases=8).phases == 1
+    assert HotSet(TOTAL, mode="dynamic", phases=8).phases == 8
+
+
+def test_oscillation_thrashes_where_static_does_not():
+    """Each oscillating flip moves the hot window to the other half of
+    the allocation.  With all-hot traffic and a pool that holds one hot
+    window but not both, the static trace warms up once and never
+    evicts, while every oscillation re-fetches the flipped window over a
+    full pool — the pure phase-change signal."""
+    def run(mode):
+        pt = hotset_grid(TOTAL, [12 * MB], modes=(mode,),
+                         ops=4096, seed=0, hot_prob=1.0)[0]
+        return run_point(pt)
+
+    static, osc = run("static"), run("oscillating")
+    assert static["evictions"] == 0
+    assert osc["evictions"] > 20
+    assert osc["migrations"] > static["migrations"]
+
+
+def test_hotset_grid_shape_and_rows():
+    pts = hotset_grid(TOTAL, [TOTAL // 2, TOTAL // 4],
+                      policies=("lrf", "lru"), ops=512, seed=1)
+    assert len(pts) == 3 * 2 * 2            # modes × caps × policies
+    assert {p.policy for p in pts} == {"lrf", "lru"}
+    row = run_point(pts[0])
+    assert row["workload"].startswith("hotset-")
+    assert row["wall_s"] > 0 and row["migrations"] > 0
