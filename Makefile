@@ -1,9 +1,13 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-engine bench-gates docs-check
+.PHONY: test lint bench bench-smoke bench-engine bench-gates docs-check
 
 test:
 	$(PY) -m pytest -x -q
+
+# fail on any svmlint contract finding over src/repro (docs/contracts.md)
+lint:
+	python tools/svmlint.py
 
 bench:
 	$(PY) benchmarks/run.py

@@ -1,0 +1,49 @@
+"""svmlint — source-level contract checking for the engine invariants.
+
+Public surface::
+
+    from repro.analysis import lint_paths, lint_source, RULES
+    findings = lint_paths(["src/repro"])      # [] on a clean tree
+
+plus the runtime frozen-column audit (`assert_frozen`,
+`frozen_violations`).  Importing the package registers the five
+contract rules from `repro.analysis.rules`.
+"""
+
+from repro.analysis.core import (
+    Finding,
+    LintModule,
+    Rule,
+    RULES,
+    SUPPRESSION_RULE,
+    iter_py_files,
+    lint_paths,
+    lint_source,
+    register_rule,
+)
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+from repro.analysis.rules import (
+    ATTRIBUTION_COUNTERS,
+    COLUMN_FIELDS,
+    MANAGER_DRIVE,
+    opcode_universe,
+)
+from repro.analysis.runtime import assert_frozen, frozen_violations
+
+__all__ = [
+    "Finding",
+    "LintModule",
+    "Rule",
+    "RULES",
+    "SUPPRESSION_RULE",
+    "iter_py_files",
+    "lint_paths",
+    "lint_source",
+    "register_rule",
+    "ATTRIBUTION_COUNTERS",
+    "COLUMN_FIELDS",
+    "MANAGER_DRIVE",
+    "opcode_universe",
+    "assert_frozen",
+    "frozen_violations",
+]

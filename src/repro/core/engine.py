@@ -96,6 +96,19 @@ OP_UNPIN = 4
 # the eager-spill loop of the activation-offload scheduler, as an op
 OP_SPILL = 5
 
+#: trace-op tag -> opcode; the single source of truth for the op
+#: vocabulary.  svmlint's opcode-exhaustiveness rule derives its universe
+#: from this table (plus the lowering-only "kernel" marker), so growing
+#: it flags every dispatch chain that has not learned the new op.
+OP_TAGS = {
+    "touch": OP_TOUCH,
+    "compute": OP_COMPUTE,
+    "writeback": OP_WRITEBACK,
+    "pin": OP_PIN,
+    "unpin": OP_UNPIN,
+    "spill": OP_SPILL,
+}
+
 # spans shorter than this run through the scalar manager path: the NumPy
 # batch setup would cost more than it saves
 FAST_SPAN_MIN = 48
@@ -1195,6 +1208,8 @@ def _exec_boundary(ct: CompiledTrace, mgr, k: int) -> None:
         while mgr.free < need and mgr.spill_oldest(overlap=overlap) \
                 is not None:
             pass
+    else:
+        raise ValueError(f"opcode {int(code)} is not a boundary op")
 
 
 def _replay(ct: CompiledTrace, mgr, s: int, e: int) -> None:

@@ -5,6 +5,7 @@ iteration, and precomputed modality-frontend stubs for VLM/audio archs."""
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Iterator
 
 import numpy as np
@@ -65,6 +66,8 @@ def modality_stub(kind: str, batch: int, tokens: int, d_model: int,
                   seed: int = 0) -> np.ndarray:
     """Precomputed patch/frame embeddings standing in for the (stubbed)
     vision/speech frontend (assignment: backbone only)."""
-    rng = np.random.default_rng(np.random.SeedSequence([seed, hash(kind) %
-                                                        (2 ** 31)]))
+    # crc32, not hash(): str hashes are salted per process (PYTHONHASHSEED)
+    # and would give each run a different stream for the same kind
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [seed, zlib.crc32(kind.encode()) % (2 ** 31)]))
     return rng.standard_normal((batch, tokens, d_model)).astype(np.float32)

@@ -1,0 +1,436 @@
+"""svmlint: framework, per-rule true-positives/negatives, suppressions,
+runtime frozen-column audit, live-tree cleanliness, CLI."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    RULES,
+    SUPPRESSION_RULE,
+    assert_frozen,
+    frozen_violations,
+    lint_paths,
+    lint_source,
+    opcode_universe,
+)
+from repro.core import MB, AddressSpace, SegmentCache, SVMManager, TraceSession
+from repro.core.engine import CompiledTrace
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SRC_REPRO = os.path.join(REPO, "src", "repro")
+
+# fixture paths that land a snippet inside / outside a rule's scope
+CORE = "src/repro/core/fixture.py"
+SVM = "src/repro/svm/fixture.py"
+LAUNCH = "src/repro/launch/fixture.py"
+DATA = "src/repro/data/fixture.py"
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# -------------------------------------------------------------- framework
+
+def test_registry_has_the_five_contract_rules():
+    assert {"opcode-exhaustive", "frozen-mutation", "manager-encapsulation",
+            "determinism", "counter-pairing"} <= set(RULES)
+    for rule in RULES.values():
+        assert rule.doc and rule.invariant
+
+
+def test_opcode_universe_matches_engine():
+    ops, tags = opcode_universe()
+    assert ops == {"OP_TOUCH", "OP_COMPUTE", "OP_WRITEBACK", "OP_PIN",
+                   "OP_UNPIN", "OP_SPILL"}
+    assert tags == {"touch", "compute", "writeback", "pin", "unpin",
+                    "spill", "kernel"}
+
+
+def test_unknown_rule_name_rejected():
+    with pytest.raises(KeyError, match="no-such-rule"):
+        lint_source("x = 1", CORE, rules=["no-such-rule"])
+
+
+# ------------------------------------------------------ opcode-exhaustive
+
+def test_opcode_incomplete_dispatch_flagged():
+    findings = lint_source("""
+def dispatch(c, mgr):
+    if c == OP_WRITEBACK:
+        mgr_writeback(c)
+    elif c == OP_PIN:
+        mgr_pin(c)
+""", CORE)
+    assert rules_of(findings) == ["opcode-exhaustive"]
+    assert "OP_TOUCH" in findings[0].message
+
+
+def test_opcode_chain_with_rejecting_else_passes():
+    assert lint_source("""
+def dispatch(c, mgr):
+    if c == OP_WRITEBACK:
+        mgr_writeback(c)
+    elif c == OP_PIN:
+        mgr_pin(c)
+    else:
+        raise ValueError(c)
+""", CORE) == []
+
+
+def test_opcode_chain_with_delegating_else_passes():
+    assert lint_source("""
+def dispatch(c, mgr):
+    if c == OP_TOUCH:
+        pass
+    elif c == OP_COMPUTE:
+        pass
+    else:
+        exec_boundary(c, mgr)
+""", CORE) == []
+
+
+def test_opcode_full_coverage_passes():
+    assert lint_source("""
+def dispatch(c):
+    if c in (OP_TOUCH, OP_COMPUTE, OP_WRITEBACK):
+        pass
+    elif c == OP_PIN or c == OP_UNPIN:
+        pass
+    elif c == OP_SPILL:
+        pass
+""", CORE) == []
+
+
+def test_tag_dispatch_missing_kernel_flagged():
+    findings = lint_source("""
+def lower(op):
+    if op[0] == "touch":
+        pass
+    elif op[0] in ("compute", "writeback", "pin", "unpin", "spill"):
+        pass
+""", CORE)
+    assert rules_of(findings) == ["opcode-exhaustive"]
+    assert "kernel" in findings[0].message
+
+
+def test_non_dispatch_if_chain_ignored():
+    # compares against at most one universe member: not a dispatch site
+    assert lint_source("""
+def f(mode):
+    if mode == "fast":
+        pass
+    elif mode == "touch":
+        pass
+""", CORE) == []
+
+
+# -------------------------------------------------------- frozen-mutation
+
+def test_column_subscript_store_flagged():
+    findings = lint_source("def f(ct):\n    ct.codes[3] = 7\n", SVM)
+    assert rules_of(findings) == ["frozen-mutation"]
+
+
+def test_column_augassign_and_inplace_method_flagged():
+    findings = lint_source("""
+def f(ct):
+    ct.rids[ct.rids >= 0] += 4
+    ct.fargs.fill(0.0)
+""", CORE)
+    assert rules_of(findings) == ["frozen-mutation", "frozen-mutation"]
+
+
+def test_numpy_out_into_column_flagged():
+    findings = lint_source(
+        "def f(ct, x):\n    np.add(x, 1, out=ct.hints)\n", CORE)
+    assert rules_of(findings) == ["frozen-mutation"]
+
+
+def test_writeable_flip_outside_freeze_flagged():
+    findings = lint_source(
+        "def thaw(ct):\n    ct.codes.flags.writeable = True\n", CORE)
+    assert rules_of(findings) == ["frozen-mutation"]
+
+
+def test_freeze_path_and_builder_init_pass():
+    assert lint_source("""
+class CompiledTrace:
+    def freeze(self):
+        self.codes.flags.writeable = False
+        return self
+
+class ColumnEmitter:
+    def __init__(self):
+        self.codes = []
+        self.rids = []
+""", CORE) == []
+
+
+def test_local_array_mutation_passes():
+    # mutating a *local* copy (the relocate idiom) is fine
+    assert lint_source("""
+def relocate(ct, delta):
+    rids = ct.rids.copy()
+    rids[rids >= 0] += delta
+    return rids
+""", CORE) == []
+
+
+# -------------------------------------------------- manager-encapsulation
+
+def test_direct_drive_flagged_in_svm():
+    findings = lint_source("def f(mgr):\n    mgr.touch(3)\n", SVM)
+    assert rules_of(findings) == ["manager-encapsulation"]
+
+
+def test_aliased_manager_drive_flagged():
+    # `m = self.mgr; m.advance(...)` — invisible to the old source grep
+    findings = lint_source("""
+class Exec:
+    def step(self):
+        m = self.mgr
+        m.advance(1e-3)
+""", LAUNCH)
+    assert rules_of(findings) == ["manager-encapsulation"]
+
+
+def test_private_member_access_flagged():
+    findings = lint_source(
+        "def f(self):\n    return self.mgr._evict(1)\n", SVM)
+    assert rules_of(findings) == ["manager-encapsulation"]
+
+
+def test_readonly_manager_access_passes():
+    assert lint_source("""
+def report(self):
+    return self.mgr.summary(), self.mgr.wall, self.mgr.resident
+""", SVM) == []
+
+
+def test_core_layer_out_of_scope():
+    # the engine itself legitimately drives the manager
+    assert lint_source("def f(mgr):\n    mgr.touch(3)\n", CORE) == []
+
+
+# ------------------------------------------------------------ determinism
+
+def test_unseeded_global_rng_flagged():
+    findings = lint_source(
+        "def f():\n    return np.random.rand(3)\n", DATA)
+    assert rules_of(findings) == ["determinism"]
+
+
+def test_unseeded_default_rng_flagged_seeded_passes():
+    assert rules_of(lint_source(
+        "rng = np.random.default_rng()\n", DATA)) == ["determinism"]
+    assert lint_source("rng = np.random.default_rng(17)\n", DATA) == []
+
+
+def test_hash_fed_seed_flagged():
+    findings = lint_source("""
+def f(kind, seed):
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, hash(kind) % (2 ** 31)]))
+""", DATA)
+    assert rules_of(findings) == ["determinism"]
+    assert "hash()" in findings[0].message
+
+
+def test_wall_clock_scoped_to_simulation_layers():
+    src = "def f():\n    return time.time()\n"
+    assert rules_of(lint_source(src, SVM)) == ["determinism"]
+    assert rules_of(lint_source(src, CORE)) == ["determinism"]
+    # launch/ft time real host work legitimately
+    assert lint_source(src, LAUNCH) == []
+
+
+def test_set_iteration_flagged_sorted_passes():
+    assert rules_of(lint_source("""
+def keys(pts):
+    for k in set(pts):
+        emit(k)
+""", CORE)) == ["determinism"]
+    assert lint_source("""
+def keys(pts):
+    for k in sorted(set(pts)):
+        emit(k)
+""", CORE) == []
+
+
+# -------------------------------------------------------- counter-pairing
+
+def test_unpaired_before_read_flagged():
+    findings = lint_source("""
+def attribute(session, mgr):
+    w0 = mgr.wall
+    session.replay("k")
+""", SVM)
+    assert rules_of(findings) == ["counter-pairing"]
+    assert "after" in findings[0].message
+
+
+def test_unpaired_after_read_flagged():
+    findings = lint_source("""
+def attribute(session, mgr):
+    session.replay("k")
+    return mgr.n_evictions
+""", SVM)
+    assert rules_of(findings) == ["counter-pairing"]
+    assert "before" in findings[0].message
+
+
+def test_paired_reads_pass():
+    assert lint_source("""
+def attribute(session, mgr):
+    w0, m0 = mgr.wall, mgr.n_migrations
+    session.replay("k")
+    return mgr.wall - w0, mgr.n_migrations - m0
+""", SVM) == []
+
+
+def test_thunk_replay_counts_as_replay():
+    findings = lint_source("""
+def attributed(self, fn):
+    w0 = self.mgr.wall
+    fn()
+""", SVM)
+    assert rules_of(findings) == ["counter-pairing"]
+
+
+def test_execute_fused_result_is_the_after_snapshot():
+    assert lint_source("""
+def run_block(mega, mgr, cuts):
+    w0 = mgr.wall
+    snaps = execute_fused(mega, mgr, cuts)
+    return snaps[:, 0] - w0
+""", SVM) == []
+
+
+def test_reads_without_replay_ignored():
+    assert lint_source(
+        "def report(mgr):\n    return mgr.wall\n", SVM) == []
+
+
+# ------------------------------------------------------------ suppressions
+
+def test_suppression_with_reason_silences():
+    assert lint_source("""
+def f():
+    return time.time()  # svmlint: disable=determinism -- host-side timer
+""", SVM) == []
+
+
+def test_own_line_suppression_covers_next_line():
+    assert lint_source("""
+def f():
+    # svmlint: disable=determinism -- host-side timer
+    return time.time()
+""", SVM) == []
+
+
+def test_bare_suppression_is_itself_a_finding():
+    findings = lint_source("""
+def f():
+    return time.time()  # svmlint: disable=determinism
+""", SVM)
+    assert rules_of(findings) == [SUPPRESSION_RULE]
+
+
+def test_suppression_of_other_rule_does_not_silence():
+    findings = lint_source("""
+def f():
+    return time.time()  # svmlint: disable=frozen-mutation -- wrong rule
+""", SVM)
+    assert rules_of(findings) == ["determinism"]
+
+
+def test_disable_all_with_reason_silences_everything():
+    assert lint_source("""
+def f(mgr):
+    mgr.touch(3)  # svmlint: disable=all -- fixture exercising the raw API
+""", SVM) == []
+
+
+# ------------------------------------------- runtime frozen-column audit
+
+def _session(n=8, cap=64 * MB, align=2 * MB):
+    space = AddressSpace(cap, alignment=align)
+    for i in range(n):
+        space.alloc(align, f"a{i}")
+    return TraceSession(SVMManager(space, profile=False))
+
+
+def _segment(sess, rids):
+    for rid in rids:
+        sess.touch(rid, concurrency=8)
+    sess.compute(1e-4)
+    return sess.seal()
+
+
+def test_sealed_concat_and_relocated_traces_are_frozen():
+    sess = _session()
+    a = _segment(sess, (0, 1, 2))
+    b = _segment(sess, (3, 4))
+    for name, ct in [("sealed", a), ("relocated", a.relocate(3)),
+                     ("concat", CompiledTrace.concat([a, b])),
+                     ("copy", a.copy())]:
+        assert frozen_violations(ct) == [], name
+        assert_frozen(ct, where=name)
+
+
+def test_batch_relocate_outputs_are_frozen():
+    sess = _session()
+    proto = _segment(sess, (0, 1))
+    cache = SegmentCache()
+    cache.put("tok", 0, proto)
+    for ct in cache.batch_relocate("tok", [0, 2, 4]):
+        assert frozen_violations(ct) == []
+
+
+def test_unfrozen_trace_fails_the_audit():
+    sess = _session()
+    ct = _segment(sess, (0, 1))
+    thawed = dataclasses.replace(ct, codes=ct.codes.copy())  # writeable
+    assert frozen_violations(thawed) == \
+        ["codes: writeable=True after freeze"]
+    with pytest.raises(AssertionError, match="codes"):
+        assert_frozen(thawed, where="thawed")
+
+
+# --------------------------------------------------- live tree + CLI
+
+def test_live_src_repro_tree_is_clean():
+    findings = lint_paths([SRC_REPRO])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "svmlint.py"), *args],
+        capture_output=True, text=True)
+
+
+def test_cli_list_rules():
+    res = _cli("--list-rules")
+    assert res.returncode == 0
+    for name in RULES:
+        assert name in res.stdout
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "src" / "repro" / "svm" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(mgr):\n    mgr.touch(3)\n")
+    res = _cli(str(bad))
+    assert res.returncode == 1
+    assert "[manager-encapsulation]" in res.stdout
+    ok = tmp_path / "src" / "repro" / "svm" / "ok.py"
+    ok.write_text("def f(mgr):\n    return mgr.wall\n")
+    assert _cli(str(ok)).returncode == 0
+    assert _cli("--rules", "no-such-rule", str(ok)).returncode == 2

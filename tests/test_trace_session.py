@@ -306,21 +306,12 @@ def test_offload_unknown_engine_rejected():
 
 def test_runtime_layer_never_drives_manager_directly():
     """Every access from the runtime layer must be a recorded op replayed
-    through the engine: no module under repro.svm / repro.launch may call
-    the manager's touch/evict entry points itself."""
-    forbidden = ("mgr.touch(", "mgr.advance(", "mgr.pin(", "mgr.unpin(",
-                 "mgr.writeback(", "mgr.spill_oldest(", "mgr.previct(",
-                 "._evict(")
+    through the engine — enforced by svmlint's manager-encapsulation rule
+    (repro.analysis), which this test runs over repro.svm + repro.launch."""
+    from repro.analysis import lint_paths
+
     root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
-    offenders = []
-    for pkg in ("svm", "launch"):
-        pkg_dir = os.path.join(root, pkg)
-        for fn in sorted(os.listdir(pkg_dir)):
-            if not fn.endswith(".py"):
-                continue
-            with open(os.path.join(pkg_dir, fn)) as f:
-                src = f.read()
-            for pat in forbidden:
-                if pat in src:
-                    offenders.append(f"{pkg}/{fn}: {pat}")
-    assert not offenders, offenders
+    findings = lint_paths(
+        [os.path.join(root, "svm"), os.path.join(root, "launch")],
+        rules=["manager-encapsulation"])
+    assert not findings, "\n".join(f.format() for f in findings)

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""svmlint CLI — contract-checking static analysis over src/repro.
+
+Usage::
+
+    python tools/svmlint.py                 # lint src/repro, exit 1 on findings
+    python tools/svmlint.py --list-rules    # show registered rules
+    python tools/svmlint.py --rules determinism,counter-pairing src/repro/svm
+
+Wired as ``make lint`` and a CI step; any finding is a failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis import RULES, lint_paths  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="svmlint",
+        description="check the engine's equivalence contracts at the "
+                    "source level")
+    ap.add_argument("paths", nargs="*",
+                    default=[os.path.join(_REPO, "src", "repro")],
+                    help="files or directories to lint "
+                         "(default: src/repro)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rules and exit")
+    ap.add_argument("--rules", metavar="NAME[,NAME...]",
+                    help="run only the named rules")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(name) for name in RULES)
+        for name in sorted(RULES):
+            rule = RULES[name]
+            scope = ", ".join(rule.scope) if rule.scope else "src/repro"
+            print(f"{name:<{width}}  [{scope}]  {rule.doc}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        findings = lint_paths(args.paths, rules=rules)
+    except KeyError as exc:
+        print(f"svmlint: {exc.args[0]}", file=sys.stderr)
+        return 2
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(f"svmlint: {n} finding{'s' if n != 1 else ''} "
+          f"({len(RULES)} rules)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
