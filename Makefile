@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke bench-engine bench-gates docs-check
+.PHONY: test lint bench bench-smoke bench-engine bench-gates chaos-smoke docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,6 +23,11 @@ bench-engine:
 # fail if any gated BENCH_engine.json ratio is below its committed floor
 bench-gates:
 	$(PY) benchmarks/check_gates.py
+
+# CI chaos gate: seeded 64-request fault schedule — zero unhandled
+# faults, exact conservation, bit-identical rerun (docs/robustness.md)
+chaos-smoke:
+	$(PY) benchmarks/chaos_smoke.py
 
 # fail if any docs/ internal link or README anchor is broken
 docs-check:

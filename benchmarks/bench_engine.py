@@ -421,6 +421,63 @@ def bench_scheduler_fused(*, requests: int = 512,
     }
 
 
+def bench_scheduler_chaos(*, requests: int = 64, tokens: int = 8) -> dict:
+    """Chaos-retention row: the seeded 64-request mix (same architectures
+    and pool as the scheduler row) run clean vs under the default
+    `FaultPlan` with the thrash guard armed.  Both runs are deterministic
+    simulations, so the gated ratio — aggregate decode throughput
+    retained under injected faults — is exact.  The chaos run must also
+    finish everything: zero failed requests, zero unapplied events, and
+    exact conservation including every injected surcharge."""
+    from repro.core import MB
+    from repro.svm import FaultPlan, ModelSpec, PoolScheduler, make_requests
+
+    specs = [ModelSpec.synthetic("archA", 12, 4 * MB, embed_bytes=8 * MB),
+             ModelSpec.synthetic("archB", 24, 4 * MB, embed_bytes=24 * MB)]
+    cap = 100 * MB
+
+    def one(plan):
+        reqs = make_requests(specs, requests, seed=0, tokens=tokens,
+                             mean_interarrival_s=2e-3)
+        sched = PoolScheduler(cap, policy="svm_aware", fault_plan=plan,
+                              thrash_watermark=3.0, thrash_window=32)
+        t0 = time.perf_counter()
+        r = sched.run(reqs)
+        return r, time.perf_counter() - t0
+
+    clean, clean_host_s = one(None)
+    plan = FaultPlan.default(0, n_requests=requests, tokens=tokens)
+    chaos, chaos_host_s = one(plan)
+    ch = chaos["chaos"]
+    assert chaos["n_failed"] == 0 and ch["retry_exhausted"] == 0 and \
+        ch["injector"]["events_remaining"] == 0, \
+        "scheduler chaos: unhandled faults in the gate schedule"
+    c, m = chaos["conservation"], chaos["mgr"]
+    assert abs(c["svm_wall_s"] - m["wall_s"]) < 1e-9 and \
+        c["evictions"] == m["evictions"], \
+        "scheduler chaos: conservation broke under injection"
+    return {
+        "label": f"serve_sched_chaos_{requests}req",
+        "requests": requests,
+        "tokens": tokens,
+        "plan_seed": 0,
+        "fault_events": ch["injector"]["events_total"],
+        "migration_faults": ch["migration_faults"],
+        "retries": ch["retries"],
+        "crashes": ch["crashes"],
+        "preemptions": ch["preemptions"],
+        "incidents": len(chaos["incidents"]),
+        "clean_tok_s": clean["agg_tok_s"],
+        "chaos_tok_s": chaos["agg_tok_s"],
+        "clean_makespan_s": clean["makespan_s"],
+        "chaos_makespan_s": chaos["makespan_s"],
+        "clean_host_s": clean_host_s,
+        "chaos_host_s": chaos_host_s,
+        "retention": chaos["agg_tok_s"] / clean["agg_tok_s"],
+        "all_completed": True,
+    }
+
+
 # the §4.2 / UVM configurations that used to drop to the scalar path —
 # each is a named row in BENCH_engine.json and part of the variant gate
 VARIANT_TRACES = [
@@ -471,7 +528,7 @@ def main() -> None:
 
     out = {"traces": [], "compile": [], "variants": [], "sweep": None,
            "trace_cache": None, "serving": None, "scheduler": None,
-           "scheduler_fused": None}
+           "scheduler_fused": None, "scheduler_chaos": None}
     for name, dos, align in traces:
         row = bench_trace(name, dos, align, reps)
         out["traces"].append(row)
@@ -546,6 +603,16 @@ def main() -> None:
           f"{sf['per_token_host_s']:.2f}s "
           f"({sf['per_token_ops_per_s'] / 1e3:.0f}k ops/s), "
           f"speedup {sf['speedup']:.2f}x", flush=True)
+
+    # the chaos config is fixed even under --smoke: the FaultPlan seed,
+    # request count, and token budget define the gate schedule
+    out["scheduler_chaos"] = bench_scheduler_chaos()
+    sx = out["scheduler_chaos"]
+    print(f"scheduler {sx['label']}: {sx['fault_events']} fault events "
+          f"({sx['migration_faults']} faults / {sx['retries']} retries / "
+          f"{sx['crashes']} crash), clean {sx['clean_tok_s']:.1f} tok/s, "
+          f"chaos {sx['chaos_tok_s']:.1f} tok/s "
+          f"(retention {sx['retention']:.2f}x)", flush=True)
 
     gate = max((r["speedup"] for r in out["traces"]
                 if r["workload"] == "stream" and r["dos"] == 147))
@@ -622,6 +689,13 @@ def main() -> None:
     out["gate_sched_fused_speedup"] = fgate
     out["gate_sched_fused_met"] = fgate >= 3.0
 
+    # chaos gate: the serving stack must retain >= 0.5x of its clean
+    # aggregate decode throughput under the default seeded fault
+    # schedule (deterministic simulation, no retry logic needed)
+    xgate = out["scheduler_chaos"]["retention"]
+    out["gate_sched_chaos_retention"] = xgate
+    out["gate_sched_chaos_met"] = xgate >= 0.5
+
     print(f"gate: stream DOS-147 speedup {gate:.1f}x "
           f"(target >= 10x) -> {'PASS' if out['gate_met'] else 'FAIL'}")
     print(f"gate: variant min speedup {vgate:.1f}x "
@@ -639,6 +713,9 @@ def main() -> None:
     print(f"gate: fused-round scheduler speedup {fgate:.2f}x "
           f"(target >= 3x) -> "
           f"{'PASS' if out['gate_sched_fused_met'] else 'FAIL'}")
+    print(f"gate: chaos throughput retention {xgate:.2f}x "
+          f"(target >= 0.5x) -> "
+          f"{'PASS' if out['gate_sched_chaos_met'] else 'FAIL'}")
 
     for path in (os.path.join(ROOT, "BENCH_engine.json"),
                  os.path.join(ROOT, "results", "bench",

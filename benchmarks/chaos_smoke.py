@@ -1,0 +1,110 @@
+"""Chaos smoke: the seeded 64-request fault schedule, end to end.
+
+CI gate for the robustness layer (docs/robustness.md): a 64-request
+mixed-architecture serving schedule runs under the default seeded
+`FaultPlan` — capacity dip + restore, a slow-page window, armed
+migration faults, one mid-decode crash — with the thrash guard enabled.
+The run must
+
+  * complete with **zero unhandled faults**: every planned event applied
+    (`events_remaining == 0`), no retry budget blown
+    (`retry_exhausted == 0`), no request failed,
+  * decode every requested token on every request,
+  * satisfy **exact conservation**: per-request attributed wall /
+    migration / eviction / byte counters sum to the shared manager's
+    aggregates, including every chaos-injected cost,
+  * be **bit-identical on rerun**: same plan seed ⇒ same per-request
+    rows, incident log, chaos counters, and makespan.
+
+Exit status is nonzero on any violation, so `make chaos-smoke` can sit
+in CI next to the bench gates.
+
+Usage:  PYTHONPATH=src python benchmarks/chaos_smoke.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import MB  # noqa: E402
+from repro.svm import (  # noqa: E402
+    FaultPlan,
+    ModelSpec,
+    PoolScheduler,
+    make_requests,
+)
+
+REQUESTS = 64
+TOKENS = 8
+PLAN_SEED = 0
+CAP = 100 * MB
+
+_checks: list[str] = []
+
+
+def check(ok: bool, what: str) -> None:
+    _checks.append(f"{'ok  ' if ok else 'FAIL'} {what}")
+    if not ok:
+        print("\n".join(_checks))
+        print(f"chaos-smoke: FAIL ({what})")
+        sys.exit(1)
+
+
+def run() -> dict:
+    specs = [ModelSpec.synthetic("archA", 12, 4 * MB, embed_bytes=8 * MB),
+             ModelSpec.synthetic("archB", 24, 4 * MB, embed_bytes=24 * MB)]
+    reqs = make_requests(specs, REQUESTS, seed=0, tokens=TOKENS,
+                         mean_interarrival_s=2e-3)
+    plan = FaultPlan.default(PLAN_SEED, n_requests=REQUESTS, tokens=TOKENS)
+    sched = PoolScheduler(CAP, policy="svm_aware", fault_plan=plan,
+                          thrash_watermark=3.0, thrash_window=32)
+    return sched.run(reqs)
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    r = run()
+    host_s = time.perf_counter() - t0
+    ch, inj = r["chaos"], r["chaos"]["injector"]
+
+    check(inj["events_remaining"] == 0,
+          f"all {inj['events_total']} planned fault events applied")
+    check(ch["retry_exhausted"] == 0, "no retry budget exhausted")
+    check(r["n_failed"] == 0 and r["n_requests"] == REQUESTS,
+          f"all {REQUESTS} requests completed")
+    check(all(q["tokens"] == TOKENS for q in r["requests"]),
+          f"every request decoded {TOKENS}/{TOKENS} tokens")
+    check(ch["migration_faults"] >= 1 and ch["crashes"] >= 1,
+          "migration faults and a crash actually fired")
+
+    c, m = r["conservation"], r["mgr"]
+    check(abs(c["svm_wall_s"] - m["wall_s"]) < 1e-9,
+          "wall conservation exact (incl. chaos surcharges)")
+    check(c["migrations"] == m["migrations"]
+          and c["evictions"] == m["evictions"]
+          and c["bytes_migrated"] == m["bytes_migrated"]
+          and c["bytes_evicted"] == m["bytes_evicted"],
+          "migration/eviction/byte conservation exact")
+
+    r2 = run()
+    check(r2["requests"] == r["requests"]
+          and r2["incidents"] == r["incidents"]
+          and r2["chaos"] == r["chaos"]
+          and r2["makespan_s"] == r["makespan_s"],
+          "rerun bit-identical (rows, incidents, chaos counters)")
+
+    print("\n".join(_checks))
+    print(f"chaos-smoke: PASS — {REQUESTS} requests x {TOKENS} tokens, "
+          f"{inj['events_total']} fault events, "
+          f"{ch['migration_faults']} faults / {ch['retries']} retries / "
+          f"{ch['crashes']} crash(es) / {ch['preemptions']} preemption(s), "
+          f"{len(r['incidents'])} incidents, "
+          f"makespan {r['makespan_s']:.3f}s sim, {host_s:.1f}s host")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,10 @@ FLOORS = {
     # scheduler round vs per-token reference replay, 512-request burst
     # mix over a pool with real tenant concurrency (measured ~4x)
     "gate_sched_fused_speedup": 3.0,
+    # chaos retention: aggregate decode throughput under the default
+    # seeded FaultPlan vs the clean run of the same 64-request mix
+    # (deterministic simulation; retries/crash recovery cost sim wall)
+    "gate_sched_chaos_retention": 0.5,
 }
 
 

@@ -19,6 +19,10 @@ Each rule enforces one invariant from ``docs/contracts.md``:
   * ``counter-pairing``       — attribution code reads manager counters
     as before/after snapshot *pairs* around a replay; an unpaired read
     breaks per-request conservation against the shared manager.
+  * ``bounded-retry``         — a loop that catches an exception and
+    re-invokes the same work must reference a bounded attempt budget
+    (`repro.ft.retry`); open-ended recovery loops never terminate under
+    a persistent fault.
 """
 
 from __future__ import annotations
@@ -26,6 +30,7 @@ from __future__ import annotations
 import ast
 import functools
 import os
+import re
 
 from repro.analysis.core import (
     Finding,
@@ -450,8 +455,8 @@ class Determinism(Rule):
 ATTRIBUTION_COUNTERS = frozenset({"wall", "n_migrations", "n_evictions",
                                   "bytes_migrated", "bytes_evicted"})
 
-_REPLAY_ATTRS = frozenset({"replay", "run", "flush", "decode_step",
-                           "decode_steps"})
+_REPLAY_ATTRS = frozenset({"replay", "replay_scalar", "run", "flush",
+                           "decode_step", "decode_steps"})
 _REPLAY_FUNCS = frozenset({"execute_compiled", "execute_fused",
                            "apply_trace"})
 
@@ -519,3 +524,67 @@ class CounterPairing(Rule):
                 f"manager counter '{counter}' read on one side of a "
                 f"replay only (missing the {side}-snapshot) — unpaired "
                 "reads mis-attribute shared-pool costs")
+
+
+# ---------------------------------------------------------- bounded-retry
+
+#: identifier fragments that mark an explicit attempt budget
+_BUDGET_NAME = re.compile(
+    r"(max_)?(attempts?|restarts?|retr(y|ies)|budget|patience)",
+    re.IGNORECASE)
+
+
+def _walk_same_scope(node: ast.AST):
+    """`ast.walk` that does not descend into nested function/class
+    definitions — their loops and handlers are their own scope."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _handler_swallows(handler: ast.ExceptHandler) -> bool:
+    """A handler that neither re-raises nor exits (break/return) swallows
+    the failure, so the enclosing loop re-invokes the same work."""
+    for n in _walk_same_scope(handler):
+        if isinstance(n, (ast.Raise, ast.Break, ast.Return)):
+            return False
+    return True
+
+
+@register_rule
+class BoundedRetry(Rule):
+    name = "bounded-retry"
+    doc = ("a while-loop that catches an exception and retries the same "
+           "work must reference a bounded attempt budget "
+           "(repro.ft.retry)")
+    invariant = ("every recovery loop terminates under a persistent "
+                 "fault: retries are spent against an explicit budget, "
+                 "never open-ended")
+
+    def check(self, mod: LintModule):
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.While):
+                continue
+            body = list(_walk_same_scope(node))
+            handlers = [h for n in body if isinstance(n, ast.Try)
+                        for h in n.handlers]
+            if not handlers or \
+                    not any(_handler_swallows(h) for h in handlers):
+                continue
+            names: set[str] = set()
+            for n in body:
+                if isinstance(n, ast.Name):
+                    names.add(n.id)
+                elif isinstance(n, ast.Attribute):
+                    names.add(n.attr)
+            if any(_BUDGET_NAME.search(x) for x in names):
+                continue
+            yield Finding(
+                self.name, mod.path, node.lineno, node.col_offset,
+                "retry loop swallows exceptions with no bounded attempt "
+                "budget in scope — use repro.ft.retry (retry_call / "
+                "RetryBudget) or reference an explicit attempt counter")

@@ -37,7 +37,7 @@ from repro.core.engine import (
     execute_fused,
 )
 from repro.core.simulator import RunResult, Workload, apply_trace, dos_sweep, simulate
-from repro.core.svm import DensitySample, Event, SVMManager
+from repro.core.svm import DensitySample, Event, MigrationError, SVMManager
 from repro.core.sweep import SweepPoint, run_point, run_sweep, trace_key
 from repro.core.traces import WORKLOADS, make_workload
 from repro.core.uvm import UVMManager, VABLOCK
@@ -48,7 +48,7 @@ __all__ = [
     "CostParams", "CostVector", "MI250X", "TPU_V5E_HOST",
     "migration_cost", "eviction_cost", "zerocopy_cost",
     "LRF", "LRU", "Clock", "RandomPolicy", "make_policy",
-    "SVMManager", "Event", "DensitySample",
+    "SVMManager", "Event", "DensitySample", "MigrationError",
     "UVMManager", "VABLOCK",
     "RunResult", "Workload", "simulate", "apply_trace", "dos_sweep",
     "WORKLOADS", "make_workload",

@@ -855,6 +855,18 @@ class TraceSession:
         self.segments_replayed += 1
         self.ops_replayed += len(ct)
 
+    def replay_scalar(self, ct: CompiledTrace) -> None:
+        """Golden op-for-op replay of one segment, regardless of the
+        session's mode.  The chaos layer routes fault-armed tokens here:
+        an armed `MigrationError` must surface at the *exact* faulting op
+        with the manager untouched past it, which the scalar dispatch
+        guarantees unconditionally (the batched tier only guarantees it
+        on the snapshot/restore path).  Byte-identical to `replay` when
+        nothing raises, by the engine's equivalence contract."""
+        _replay(ct, self.mgr, 0, len(ct))
+        self.segments_replayed += 1
+        self.ops_replayed += len(ct)
+
     def flush(self, key=None) -> CompiledTrace | None:
         """Seal the pending ops and replay them immediately.  Returns the
         segment (cached under ``key`` if given), or None when nothing was

@@ -55,6 +55,16 @@ from repro.core.policies import EvictionPolicy, make_policy
 from repro.core.ranges import AddressSpace, Range
 
 
+class MigrationError(RuntimeError):
+    """An injected (or, on real hardware, reported) range-migration
+    failure.  Raised by `SVMManager` *before* any state mutation for the
+    failing migration, so the manager is left exactly as it was and the
+    caller can retry the access — subclassing ``RuntimeError`` keeps the
+    batched engine's mid-span snapshot/restore + scalar re-raise path
+    applicable, surfacing the error at the exact op with consistent
+    state."""
+
+
 @dataclasses.dataclass
 class Event:
     """One migration or eviction, for profile plots (paper Fig. 7)."""
@@ -121,6 +131,11 @@ class SVMManager:
         self.compute_time = 0.0
         self.cost = CostVector()        # five-term host-visible work
         self.evict_cost_total = 0.0     # also folded into cost.alloc
+        self.chaos_wall = 0.0           # injected latency (faults/backoff)
+
+        # chaos hooks: armed migration-fault countdown + fault ledger
+        self.fault_armed = 0
+        self.migration_faults = 0
 
         # counters
         self.n_migrations = 0
@@ -194,6 +209,46 @@ class SVMManager:
         """Pure device compute time (no driver involvement)."""
         self.wall += seconds
         self.compute_time += seconds
+
+    # -------------------------------------------------------- chaos hooks
+    #
+    # Public entry points for the fault-injection layer (docs/
+    # robustness.md).  They are deliberately *not* op-driving calls: the
+    # runtime layer may invoke them directly without breaking the
+    # manager-encapsulation contract, because none of them replays a
+    # recorded access — they perturb the environment the replays run in.
+
+    def inject_latency(self, seconds: float) -> None:
+        """Charge injected wall time (slow-page surcharge, retry
+        backoff) to the critical path.  Not compute, not migration work —
+        ledgered separately in ``chaos_wall``."""
+        self.wall += seconds
+        self.chaos_wall += seconds
+
+    def arm_migration_faults(self, n: int) -> None:
+        """Arm the next ``n`` migrations to raise `MigrationError`
+        (``n=0`` disarms).  The raise happens before any state mutation
+        for that migration, so a retry sees the manager unchanged."""
+        self.fault_armed = int(n)
+
+    def resize_capacity(self, new_capacity: int) -> float:
+        """Transient co-tenancy: grow/shrink the device pool at runtime
+        (another tenant grabbed or released pool bytes).  Shrinking below
+        current occupancy emergency-evicts policy victims until the pool
+        fits again; the eviction wall lands on the critical path.
+        Returns the emergency-eviction wall cost."""
+        new_capacity = int(new_capacity)
+        if new_capacity < 1:
+            raise ValueError("pool capacity must stay positive")
+        delta = new_capacity - self.capacity
+        self.capacity = new_capacity
+        self.free += delta
+        w = 0.0
+        while self.free < 0:
+            victim = self._pick_victim()
+            w += self._evict(victim, charge=None)
+        self.wall += w
+        return w
 
     def touch(
         self,
@@ -270,6 +325,14 @@ class SVMManager:
 
     def _migrate_bytes(self, nbytes: int, r: Range, *, resident: bool,
                        concurrency: int, trigger: int) -> None:
+        if self.fault_armed > 0:
+            # armed chaos fault: fail this migration before touching any
+            # state (counters, residency, policy, clock all unchanged)
+            self.fault_armed -= 1
+            self.migration_faults += 1
+            raise MigrationError(
+                f"injected migration failure on range {r.rid} "
+                f"({nbytes} bytes)")
         mc = migration_cost(nbytes, self.params)
 
         # ---- allocation: evict until there is room (paper §2.2, Fig. 3)
@@ -391,4 +454,7 @@ class SVMManager:
             "serviceable_per_migration": self.serviceable_per_migration,
             "cost_breakdown": self.cost.as_dict(),
             "dos": self.space.dos(),
+            "capacity_bytes": self.capacity,
+            "chaos_wall_s": self.chaos_wall,
+            "migration_faults": self.migration_faults,
         }

@@ -1,3 +1,10 @@
+from repro.ft.retry import (
+    DEFAULT_RETRY,
+    RetryBudget,
+    RetryError,
+    RetryPolicy,
+    retry_call,
+)
 from repro.ft.supervisor import (
     ElasticPlan,
     StragglerMonitor,
@@ -6,4 +13,5 @@ from repro.ft.supervisor import (
 )
 
 __all__ = ["TrainSupervisor", "StragglerMonitor", "plan_elastic_remesh",
-           "ElasticPlan"]
+           "ElasticPlan", "RetryPolicy", "RetryBudget", "RetryError",
+           "retry_call", "DEFAULT_RETRY"]

@@ -27,6 +27,7 @@ import time
 from typing import Any, Callable, Iterator
 
 from repro.checkpoint import CheckpointManager
+from repro.ft.retry import RetryBudget, RetryPolicy
 
 PyTree = Any
 
@@ -34,13 +35,30 @@ PyTree = Any
 # ------------------------------------------------------------- stragglers
 
 class StragglerMonitor:
+    """Per-step wall times feed a median-relative slowness check; each
+    host's strike counting runs on a `RetryBudget` (``max_attempts =
+    patience``): a slow step spends one attempt, a normal step re-arms,
+    and an exhausted budget flags the host for the next elastic plan."""
+
     def __init__(self, threshold: float = 1.8, patience: int = 3,
                  window: int = 32):
         self.threshold = threshold
         self.patience = patience
         self.window = window
         self.history: dict[int, list[float]] = {}
-        self.strikes: dict[int, int] = {}
+        self._budgets: dict[int, RetryBudget] = {}
+
+    @property
+    def strikes(self) -> dict[int, int]:
+        """Consecutive slow-step strikes per host (budget attempts)."""
+        return {h: b.attempts for h, b in self._budgets.items()}
+
+    def _budget(self, host: int) -> RetryBudget:
+        b = self._budgets.get(host)
+        if b is None:
+            b = self._budgets[host] = RetryBudget(
+                RetryPolicy(max_attempts=max(1, self.patience)))
+        return b
 
     def record(self, host: int, step_time: float) -> None:
         self.history.setdefault(host, []).append(step_time)
@@ -53,11 +71,12 @@ class StragglerMonitor:
             t for ts in self.history.values() for t in ts)
         out = []
         for host, ts in self.history.items():
+            b = self._budget(host)
             if ts and ts[-1] > self.threshold * med:
-                self.strikes[host] = self.strikes.get(host, 0) + 1
+                b.spend()
             else:
-                self.strikes[host] = 0
-            if self.strikes.get(host, 0) >= self.patience:
+                b.reset()
+            if b.exhausted:
                 out.append(host)
         return out
 
@@ -110,14 +129,29 @@ def plan_elastic_remesh(shape: tuple[int, ...], axes: tuple[str, ...],
 # ------------------------------------------------------------- supervisor
 
 class TrainSupervisor:
-    """Runs a step function under checkpoint/restart + straggler watch."""
+    """Runs a step function under checkpoint/restart + straggler watch.
 
-    def __init__(self, ckpt: CheckpointManager, *, max_restarts: int = 3):
+    Restart accounting runs on the shared `RetryBudget`
+    (``max_attempts = max_restarts``): every failure spends one attempt
+    and its deterministic exponential-backoff delay is ledgered in
+    ``budget.backoff_s``; once the budget is exhausted the original
+    failure re-raises."""
+
+    def __init__(self, ckpt: CheckpointManager, *, max_restarts: int = 3,
+                 retry_policy: RetryPolicy | None = None):
         self.ckpt = ckpt
         self.max_restarts = max_restarts
+        if retry_policy is None:
+            retry_policy = RetryPolicy(
+                max_attempts=max(1, max_restarts), base_delay_s=1.0,
+                max_delay_s=60.0)
+        self.budget = RetryBudget(retry_policy)
         self.monitor = StragglerMonitor()
-        self.restarts = 0
         self.log: list[str] = []
+
+    @property
+    def restarts(self) -> int:
+        return self.budget.attempts
 
     def run(
         self,
@@ -143,10 +177,13 @@ class TrainSupervisor:
                 step += 1
                 self.ckpt.maybe_save(step, state, blocking=True)
             except Exception as e:  # noqa: BLE001 — restart path
-                self.restarts += 1
                 self.log.append(f"failure at step {step}: {e!r}")
-                if self.restarts > self.max_restarts:
+                if self.max_restarts < 1 or self.budget.exhausted:
                     raise
+                delay = self.budget.spend()
+                self.log.append(
+                    f"backoff {delay:g}s "
+                    f"({self.budget.remaining} restart(s) left)")
                 restored = self.ckpt.restore_latest(init_state)
                 if restored is None:
                     state, step = init_state, 0

@@ -139,8 +139,27 @@ def decode_tokens(cfg, serve_step, params, tok, cache, ctx, steps: int):
     return outs, cache
 
 
+def _chaos_line(r: dict) -> str:
+    """One-line chaos/recovery summary (empty without an injector)."""
+    ch = r.get("chaos")
+    if not ch or "injector" not in ch:
+        return ""
+    return (
+        f"\n  chaos[{ch['injector']['plan']} seed "
+        f"{ch['injector']['seed']}]: "
+        f"{ch['injector']['events_applied']}/"
+        f"{ch['injector']['events_total']} events, "
+        f"{ch['migration_faults']} migration faults / "
+        f"{ch['retries']} retries ({ch['retry_exhausted']} exhausted), "
+        f"{ch['crashes']} crashes, {ch['preemptions']} preemptions, "
+        f"{ch['resumes']} resumes, {ch['degraded_rounds']} degraded "
+        f"rounds, {r['n_failed']} failed, "
+        f"backoff {ch['backoff_wall_s'] * 1e3:.2f}ms")
+
+
 def schedule_report(r: dict) -> str:
-    """Three-line human summary of a `run_schedule` result dict."""
+    """Three-line human summary of a `run_schedule` result dict (plus a
+    chaos/recovery line when a fault plan was injected)."""
     sc = r["shared_cache"]
     return (
         f"svm sched[{r['policy']}]: {r['n_requests']} reqs, "
@@ -160,7 +179,8 @@ def schedule_report(r: dict) -> str:
         f"{sc['shared_lookup_misses']} misses, "
         f"{sc['shared_relocations']} relocations, "
         f"{sc['shared_concats']} round concats "
-        f"({'fused' if r.get('fused') else 'per-token'} replay)")
+        f"({'fused' if r.get('fused') else 'per-token'} replay)"
+        + _chaos_line(r))
 
 
 def main() -> None:
@@ -187,6 +207,19 @@ def main() -> None:
                          "process; 0 = all requests arrive at once)")
     ap.add_argument("--sched-policy", default="svm_aware",
                     choices=["fifo", "admission", "svm_aware"])
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject the default seeded fault plan into the "
+                         "multi-tenant schedule (capacity loss, slow "
+                         "pages, migration faults, a crash) and report "
+                         "the recovery accounting")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the default fault plan")
+    ap.add_argument("--chaos-intensity", type=float, default=1.0,
+                    help="scales the number of injected migration faults")
+    ap.add_argument("--thrash-watermark", type=float, default=None,
+                    help="evictions-per-token watermark for the runtime "
+                         "thrash guard (preempt + tighten admission); "
+                         "unset = guard off")
     args = ap.parse_args()
     if args.requests > 1 and args.svm_budget_frac <= 0.0:
         ap.error("--requests > 1 needs --svm-budget-frac > 0 "
@@ -247,13 +280,20 @@ def main() -> None:
         # multi-tenant accounting: N requests of this model contending
         # for one shared pool (pure simulation — rides the same clock
         # as the single-stream report above)
-        from repro.svm import ModelSpec, run_schedule
+        from repro.svm import FaultPlan, ModelSpec, run_schedule
         spec = ModelSpec.from_params(args.arch, params, batch=args.batch)
         pool = max(int(spec.total_bytes * args.svm_budget_frac), 1)
+        plan = None
+        if args.chaos:
+            plan = FaultPlan.default(args.chaos_seed,
+                                     n_requests=args.requests,
+                                     tokens=args.decode,
+                                     intensity=args.chaos_intensity)
         sched = run_schedule(
             [spec], args.requests, pool, policy=args.sched_policy,
             seed=0, mean_interarrival_s=args.arrival,
-            tokens=args.decode, evict_policy=args.svm_policy)
+            tokens=args.decode, evict_policy=args.svm_policy,
+            fault_plan=plan, thrash_watermark=args.thrash_watermark)
         print(schedule_report(sched))
     print("first request continuation:", seq[0].tolist())
 

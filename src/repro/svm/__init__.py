@@ -16,6 +16,7 @@ from repro.svm.offload import (
     record_offload,
     simulate_offload,
 )
+from repro.svm.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.svm.scheduler import (
     ModelSpec,
     PoolScheduler,
@@ -28,4 +29,5 @@ __all__ = ["plan_param_ranges", "plan_leaf_ranges", "tree_leaf_sizes",
            "ParamRanges", "StreamingExecutor", "run_layer_stream",
            "OffloadPlan", "plan_offload", "record_offload",
            "simulate_offload", "ModelSpec", "PoolScheduler", "Request",
-           "make_requests", "run_schedule"]
+           "make_requests", "run_schedule",
+           "FaultPlan", "FaultEvent", "FaultInjector"]

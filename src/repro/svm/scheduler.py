@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from collections import OrderedDict, deque
 from typing import Any, Sequence
 
@@ -59,6 +60,7 @@ import numpy as np
 
 from repro.core import (
     AddressSpace,
+    MigrationError,
     SVMManager,
     SegmentCache,
     TraceSession,
@@ -66,6 +68,8 @@ from repro.core import (
 )
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
 from repro.core.ranges import DEFAULT_BASE
+from repro.ft.retry import RetryError, RetryPolicy, retry_call
+from repro.svm.faults import FaultInjector, FaultPlan
 from repro.svm.planner import ParamRanges, plan_leaf_ranges
 
 PyTree = Any
@@ -183,6 +187,15 @@ class Request:
     bytes_migrated: int = 0
     bytes_evicted: int = 0
     svm_wall_s: float = 0.0
+    # chaos / recovery accounting (docs/robustness.md)
+    faults: int = 0            # migration faults this request absorbed
+    retries: int = 0           # bounded-retry attempts after faults
+    backoff_s: float = 0.0     # simulated backoff wall charged to it
+    crashes: int = 0           # mid-decode crashes survived
+    preemptions: int = 0       # thrash-guard preemptions survived
+    resumes: int = 0           # re-admissions from carried session state
+    failed: bool = False       # dropped after retry-budget exhaustion
+    not_before_s: float = 0.0  # re-admission backoff gate
 
     @property
     def latency_s(self) -> float:
@@ -208,6 +221,10 @@ class Request:
             "bytes_evicted": self.bytes_evicted,
             "svm_wall_s": self.svm_wall_s,
             "pinned_bytes": self.pinned_bytes,
+            "faults": self.faults, "retries": self.retries,
+            "backoff_s": self.backoff_s, "crashes": self.crashes,
+            "preemptions": self.preemptions, "resumes": self.resumes,
+            "failed": self.failed,
         }
 
 
@@ -261,7 +278,11 @@ class PoolScheduler:
                  concurrency: int = 64, compute_rate: float | None = None,
                  scalar: bool = False, fused: bool = True,
                  base: int = DEFAULT_BASE,
-                 segment_cache_size: int = 512):
+                 segment_cache_size: int = 512,
+                 fault_plan: FaultPlan | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 thrash_watermark: float | None = None,
+                 thrash_window: int = 64):
         if policy not in POLICIES:
             raise ValueError(f"unknown scheduling policy {policy!r}; "
                              f"available: {POLICIES}")
@@ -296,16 +317,48 @@ class PoolScheduler:
         # steady-state round) reuse one concatenated mega-trace
         self._concat_memo: "OrderedDict[tuple, tuple]" = OrderedDict()
 
+        # ---- chaos layer + runtime guards (docs/robustness.md)
+        self.injector = (FaultInjector(fault_plan)
+                         if fault_plan is not None else None)
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy(max_attempts=4,
+                                              base_delay_s=1e-4))
+        # thrash detector: sliding evictions-per-token watermark over
+        # manager counter deltas (None = guard off)
+        self.thrash_watermark = thrash_watermark
+        self.thrash_window = max(int(thrash_window), 1)
+        self._thrash_hist: "deque[tuple[int, int]]" = deque()
+        self._thrash_cooldown = 0
+        self._tokens_total = 0
+        self._pending_fail_attempts = 0
+        self.cost_scale = 1.0
+        self.failed: list[Request] = []
+        self.incidents: list[str] = []
+        self._chaos = {
+            "migration_faults": 0, "retries": 0, "retry_exhausted": 0,
+            "crashes": 0, "preemptions": 0, "resumes": 0,
+            "capacity_events": 0, "slow_page_windows": 0,
+            "degraded_rounds": 0, "fused_fallbacks": 0,
+            "thrash_trips": 0, "backoff_wall_s": 0.0,
+        }
+
     # -------------------------------------------------------- admission
 
     def _fits(self, spec: ModelSpec) -> bool:
+        # admission probes the *effective* pool: a chaos capacity loss
+        # (mgr.resize_capacity) tightens admission until it is restored
+        cap = min(self.capacity, self.mgr.capacity)
         return (self.admitted_bytes + spec.total_bytes
-                <= self.admit_watermark * self.capacity)
+                <= self.admit_watermark * cap)
 
     def _admit(self, queued: "deque[Request]",
                active: list[Request]) -> None:
         while queued:
             head = queued[0]
+            if head.not_before_s > self.now + 1e-12:
+                # crash/preemption re-admission backoff: the head waits
+                # out its gate (head-of-line, like admission control)
+                break
             if self.policy != "fifo" and not self._fits(head.spec):
                 # head-of-line admission control; an oversized request
                 # that can never fit is admitted alone rather than
@@ -315,19 +368,25 @@ class PoolScheduler:
             self._admit_one(queued.popleft(), active)
 
     def _admit_one(self, req: Request, active: list[Request]) -> None:
-        req.plan = plan_leaf_ranges(req.spec.leaves, self.capacity,
-                                    space=self.space, align_start=True)
-        geo = req.plan.geometry()
-        proto = self._geometry.setdefault(req.spec, geo)
-        if geo != proto:   # pragma: no cover — congruence is by design
-            raise AssertionError(
-                f"req {req.req_id}: plan geometry diverged from its "
-                f"spec's prototype; segment sharing would be unsound")
-        req.session = TraceSession(
-            self.mgr, scalar=self.scalar, cache_size=8,
-            shared_cache=self.shared_cache, rid_base=req.plan.rid_base)
-        self._sessions.append(req.session)
-        req.admit_s = self.now
+        if req.plan is None:
+            req.plan = plan_leaf_ranges(req.spec.leaves, self.capacity,
+                                        space=self.space, align_start=True)
+            geo = req.plan.geometry()
+            proto = self._geometry.setdefault(req.spec, geo)
+            if geo != proto:  # pragma: no cover — congruence is by design
+                raise AssertionError(
+                    f"req {req.req_id}: plan geometry diverged from its "
+                    f"spec's prototype; segment sharing would be unsound")
+            req.session = TraceSession(
+                self.mgr, scalar=self.scalar, cache_size=8,
+                shared_cache=self.shared_cache, rid_base=req.plan.rid_base)
+            self._sessions.append(req.session)
+            req.admit_s = self.now
+        else:
+            # crash/preemption resume: the plan, session, and compiled
+            # segments carry over — re-admission replays nothing
+            req.resumes += 1
+            self._chaos["resumes"] += 1
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
         self.admitted_bytes += req.spec.total_bytes
@@ -372,17 +431,23 @@ class PoolScheduler:
     def _replay_attributed(self, req: Request, fn) -> None:
         """Run one session replay and attribute the manager's counter
         deltas (wall, migrations, evictions, bytes) to ``req`` — the
-        per-request rows sum exactly to the shared manager's totals."""
+        per-request rows sum exactly to the shared manager's totals.
+        Attribution lands in ``finally``: a replay that raises mid-way
+        (an injected `MigrationError`) still charges whatever work the
+        manager did before the fault, so conservation holds across
+        failed attempts too."""
         m = self.mgr
         w0, mig0, ev0 = m.wall, m.n_migrations, m.n_evictions
         bm0, be0 = m.bytes_migrated, m.bytes_evicted
-        fn()
-        req.svm_wall_s += m.wall - w0
-        req.migrations += m.n_migrations - mig0
-        req.evictions += m.n_evictions - ev0
-        req.bytes_migrated += m.bytes_migrated - bm0
-        req.bytes_evicted += m.bytes_evicted - be0
-        self.now += m.wall - w0
+        try:
+            fn()
+        finally:
+            req.svm_wall_s += m.wall - w0
+            req.migrations += m.n_migrations - mig0
+            req.evictions += m.n_evictions - ev0
+            req.bytes_migrated += m.bytes_migrated - bm0
+            req.bytes_evicted += m.bytes_evicted - be0
+            self.now += m.wall - w0
 
     def _record_token(self, session: TraceSession, spec: ModelSpec,
                       plan: ParamRanges) -> None:
@@ -400,10 +465,216 @@ class PoolScheduler:
         def rec(s, spec=req.spec, plan=req.plan):
             self._record_token(s, spec, plan)
 
-        self._replay_attributed(req, lambda: req.session.run(key, rec))
+        if self._pending_fail_attempts or self.cost_scale != 1.0:
+            # active hazard: route through the golden scalar path with
+            # bounded retry (may raise RetryError — the caller drops the
+            # request; no token is counted then)
+            self._chaos_token(req, key, rec)
+        else:
+            self._replay_attributed(req, lambda: req.session.run(key, rec))
         req.tokens_done += 1
+        self._tokens_total += 1
         if req.tokens_done == 1:
             req.first_token_s = self.now
+
+    # ------------------------------------------------------- chaos layer
+
+    def _chaos_token(self, req: Request, key, rec) -> None:
+        """Decode one token under active hazards.
+
+        Armed migration faults must surface at the exact faulting op with
+        the manager untouched past it — only op-for-op scalar dispatch
+        guarantees that unconditionally (the vectorized tiers batch
+        migrations), so the hazard token replays via
+        `TraceSession.replay_scalar` (byte-identical when nothing
+        raises).  Recovery is the shared bounded retry
+        (`repro.ft.retry`): one armed fault per attempt for the event's
+        first ``fail_attempts`` attempts, deterministic exponential
+        backoff charged to the simulated clock via
+        `SVMManager.inject_latency`.  A slow-page window charges its
+        multiplicative migration-cost surcharge from the token's
+        measured cost delta.  Everything — failed attempts included —
+        runs inside one attribution window, so conservation holds."""
+        session = req.session
+        ct = session.fetch(key, rec)
+        fail_attempts = self._pending_fail_attempts
+        self._pending_fail_attempts = 0
+        m = self.mgr
+        mf0 = m.migration_faults
+
+        def on_backoff(attempt: int, delay_s: float) -> None:
+            req.retries += 1
+            req.backoff_s += delay_s
+            self._chaos["retries"] += 1
+            self._chaos["backoff_wall_s"] += delay_s
+            m.inject_latency(delay_s)
+
+        def attempt_token(attempt: int) -> None:
+            m.arm_migration_faults(1 if attempt <= fail_attempts else 0)
+            try:
+                c0 = m.cost.total()
+                session.replay_scalar(ct)
+                if self.cost_scale != 1.0:
+                    m.inject_latency((self.cost_scale - 1.0)
+                                     * (m.cost.total() - c0))
+            finally:
+                # never leak an armed fault into later vectorized replays
+                m.arm_migration_faults(0)
+
+        self._replay_attributed(
+            req, lambda: retry_call(attempt_token,
+                                    policy=self.retry_policy,
+                                    retry_on=(MigrationError,),
+                                    on_backoff=on_backoff))
+        if fail_attempts:
+            if m.migration_faults > mf0:
+                req.faults += 1
+                self._chaos["migration_faults"] += 1
+            else:
+                # the token ran fully resident — nothing migrated, so
+                # there was no migration to fail; the armed hazard
+                # carries to the next decoded token
+                self._pending_fail_attempts = fail_attempts
+
+    def _chaos_step(self, req: Request, queued: "deque[Request]",
+                    active: list[Request]) -> bool:
+        """Pump the injector at the current token counter: apply every
+        due environment event, then at most one token-targeted event
+        aimed at ``req`` (the next decoder).  Returns True when the
+        event consumed the request's turn (a crash — no token
+        decodes)."""
+        for ev in self.injector.due_env(self._tokens_total):
+            if ev.kind in ("capacity_loss", "capacity_restore"):
+                self._apply_capacity_event(ev, req, active)
+            elif ev.kind == "slow_page":
+                self.cost_scale = float(ev.frac)
+                self._chaos["slow_page_windows"] += 1
+                self.incidents.append(
+                    f"tok={self._tokens_total} slow_page window opens "
+                    f"(migration cost x{ev.frac:g})")
+            else:  # slow_page_end
+                self.cost_scale = 1.0
+        ev = self.injector.pop_token_event(self._tokens_total)
+        if ev is None:
+            return False
+        if ev.kind == "migration_fault":
+            # arm the next decode; _chaos_token recovers via bounded retry
+            self._pending_fail_attempts = max(1, int(ev.fail_attempts))
+            return False
+        # crash: the request dies mid-decode — drain its ranges eagerly
+        # and re-queue it to resume from its TraceSession carried state
+        req.crashes += 1
+        self._chaos["crashes"] += 1
+        self.incidents.append(
+            f"tok={self._tokens_total} crash req={req.req_id} at "
+            f"tokens_done={req.tokens_done} — drained, re-queued")
+        self._evacuate(req, active, queued, requeue=True)
+        return True
+
+    def _apply_capacity_event(self, ev, req: Request,
+                              active: list[Request]) -> None:
+        """Transient co-tenancy via the public `resize_capacity` hook.
+        The shrink target is clamped above pinned bytes plus the largest
+        active leaf — a pool smaller than that deadlocks the next
+        migration — and the emergency-eviction work is attributed to the
+        next decoder so conservation stays exact."""
+        self._chaos["capacity_events"] += 1
+        target = max(int(self.capacity * ev.frac), 1)
+        floor_b = self.pinned_bytes_total
+        if active:
+            floor_b += max(max(n for _, n in r.spec.leaves)
+                           for r in active)
+        target = max(target, floor_b, 1)
+        self._replay_attributed(
+            req, lambda: self.mgr.resize_capacity(target))
+        self.incidents.append(
+            f"tok={self._tokens_total} {ev.kind}: pool -> {target} bytes "
+            f"({target / self.capacity:.0%} of nominal)")
+
+    def _evacuate(self, req: Request, active: list[Request],
+                  queued: "deque[Request]", *, requeue: bool) -> None:
+        """Eagerly drain a request out of the pool: unpin its pins,
+        write back every resident range of its plan (counted as
+        evictions, like any algorithmic device→host transfer), and
+        either re-queue it behind a deterministic backoff gate or drop
+        it to the failed list.  Plan, session, and compiled segments are
+        carried, so a re-admission resumes byte-identically at the next
+        un-decoded token."""
+        def drain(session=req.session, plan=req.plan,
+                  pinned=req.pinned_rids):
+            for rid in pinned:
+                session.unpin(rid)
+            for rids in plan.leaf_ranges.values():
+                for rid in rids:
+                    session.writeback(rid)
+            session.flush()
+        self._replay_attributed(req, drain)
+        if req.pinned_rids:
+            self.pinned_bytes_total -= req.pinned_bytes
+            req.pinned_rids = ()
+            req.pinned_bytes = 0
+        self.admitted_bytes -= req.spec.total_bytes
+        active.remove(req)
+        if requeue:
+            attempt = max(1, req.crashes + req.preemptions)
+            req.not_before_s = self.now + self.retry_policy.delay(attempt)
+            queued.append(req)
+        else:
+            req.failed = True
+            req.finish_s = self.now
+            self.failed.append(req)
+
+    def _thrash_check(self, active: list[Request],
+                      queued: "deque[Request]") -> None:
+        """Thrash detector (opt-in via ``thrash_watermark``): a sliding
+        window of (token counter, manager eviction counter) snapshots.
+        When evictions-per-token over the window crosses the watermark,
+        degrade: preempt the largest active tenant (eager drain,
+        re-queue with backoff, resume from carried session state) and
+        tighten admission — the paper's thrashing signature turned into
+        a runtime control loop."""
+        if self.thrash_watermark is None:
+            return
+        self._thrash_hist.append((self._tokens_total,
+                                  self.mgr.n_evictions))
+        cutoff = self._tokens_total - self.thrash_window
+        while len(self._thrash_hist) > 1 and \
+                self._thrash_hist[0][0] < cutoff:
+            self._thrash_hist.popleft()
+        t0, e0 = self._thrash_hist[0]
+        dt = self._tokens_total - t0
+        if dt < self.thrash_window:
+            return
+        rate = (self.mgr.n_evictions - e0) / dt
+        if rate <= self.thrash_watermark:
+            return
+        if len(active) <= 1 or self._tokens_total < self._thrash_cooldown:
+            return
+        victim = max(active, key=lambda r: (r.spec.total_bytes,
+                                            -r.admit_seq))
+        victim.preemptions += 1
+        self._chaos["preemptions"] += 1
+        self._chaos["thrash_trips"] += 1
+        self.admit_watermark = max(0.3, self.admit_watermark * 0.85)
+        self.incidents.append(
+            f"tok={self._tokens_total} thrash-guard trip "
+            f"(ev/token={rate:.2f} > {self.thrash_watermark:g}): preempt "
+            f"req={victim.req_id}, "
+            f"admit_watermark->{self.admit_watermark:.2f}")
+        self._evacuate(victim, active, queued, requeue=True)
+        self._thrash_cooldown = self._tokens_total + self.thrash_window
+        self._thrash_hist.clear()
+
+    def _chaos_round_pending(self, order: list[Request]) -> bool:
+        """True when a hazard is live or due within this round — the
+        fused tier degrades the whole round to the golden per-token path
+        (chaos events key off the per-token counter, which a fused block
+        only advances in bulk)."""
+        if self.cost_scale != 1.0 or self._pending_fail_attempts:
+            return True
+        if self.injector is None:
+            return False
+        return self.injector.next_at() <= self._tokens_total + len(order)
 
     # ---------------------------------------------------- fused round tier
 
@@ -502,6 +773,36 @@ class PoolScheduler:
             self._run_block_fused(block, queued, active, done, ingest)
             i = j
 
+    def _fused_fallback(self, block: list[Request], n_segs: int,
+                        queued: "deque[Request]", active: list[Request],
+                        done: list[Request], ingest) -> None:
+        """Golden per-token replay of one diverged fused block, with the
+        incident logged."""
+        self._chaos["fused_fallbacks"] += 1
+        self.incidents.append(
+            f"tok={self._tokens_total} fused divergence: cut prefix "
+            f"sums != segment totals ({n_segs}-segment block) — "
+            f"per-token fallback")
+        for req in block:
+            self._decode_token(req)
+            if req.tokens_done >= req.n_tokens:
+                self._retire(req, active, done)
+            ingest()
+            self._admit(queued, active)
+
+    @staticmethod
+    def _fused_diverged(segs: list, mega, cuts) -> bool:
+        """Structural cross-check before a fused pass: the cut prefix
+        sums must reproduce the member segment op totals exactly and the
+        last cut must cover the whole mega-trace."""
+        if len(cuts) != len(segs):
+            return True
+        bounds = np.concatenate(
+            [np.zeros(1, dtype=np.int64), np.asarray(cuts, np.int64)])
+        expected = np.asarray([len(s) for s in segs], dtype=np.int64)
+        return (int(bounds[-1]) != len(mega)
+                or not np.array_equal(np.diff(bounds), expected))
+
     def _run_block_fused(self, block: list[Request],
                          queued: "deque[Request]", active: list[Request],
                          done: list[Request], ingest) -> None:
@@ -516,11 +817,32 @@ class PoolScheduler:
         else:
             mega = self._concat_round(segs)
             cuts = mega.seg_bounds[1:]
+        if self._fused_diverged(segs, mega, cuts):
+            # fused-divergence guard: the concatenated round's cut
+            # prefix sums disagree with the member segment totals.
+            # Nothing has executed yet, so fall back to the golden
+            # per-token path for this block — no double charge.
+            self._fused_fallback(block, len(segs), queued, active, done,
+                                 ingest)
+            return
         m = self.mgr
         prev_w = m.wall
         prev_c = [m.n_migrations, m.n_evictions,
                   m.bytes_migrated, m.bytes_evicted]
         snaps = execute_fused(mega, m, cuts)
+        live = np.array([m.wall, float(m.n_migrations),
+                         float(m.n_evictions), float(m.bytes_migrated),
+                         float(m.bytes_evicted)])
+        if not np.array_equal(snaps[-1], live):
+            # fused-divergence guard, post-hoc half: the final sampled
+            # cut must equal the live counters; fold any residual into
+            # the last member's row so conservation stays exact
+            self.incidents.append(
+                f"tok={self._tokens_total} fused reconciliation: final "
+                f"cut row != live counters — residual charged to "
+                f"req={block[-1].req_id}")
+            snaps = snaps.copy()
+            snaps[-1] = live
         walls = snaps[:, 0].tolist()
         counts = snaps[:, 1:].astype(np.int64).tolist()
         for k, req in enumerate(block):
@@ -537,6 +859,7 @@ class PoolScheduler:
             sess.segments_replayed += 1
             sess.ops_replayed += len(segs[k])
             req.tokens_done += 1
+            self._tokens_total += 1
             if req.tokens_done == 1:
                 req.first_token_s = self.now
             if req.tokens_done >= req.n_tokens:
@@ -560,7 +883,62 @@ class PoolScheduler:
         active.remove(req)
         done.append(req)
 
+    def _run_round_tokenwise(self, order: list[Request],
+                             queued: "deque[Request]",
+                             active: list[Request], done: list[Request],
+                             ingest) -> None:
+        """One scheduler round on the golden per-token path — the
+        non-fused tier, and the fused tier's degradation target whenever
+        a chaos hazard is live or due this round."""
+        for req in order:
+            if req not in active:
+                continue   # crashed/preempted out earlier this round
+            if req.tokens_done >= req.n_tokens:
+                # zero-token (or raced-complete) request: retire it
+                # here, not via a decode, or the loop never drains
+                self._retire(req, active, done)
+                continue
+            if self.injector is not None and \
+                    self._chaos_step(req, queued, active):
+                # a crash consumed this request's turn — no token
+                ingest()
+                self._admit(queued, active)
+                continue
+            try:
+                self._decode_token(req)
+            except RetryError as e:
+                # retry budget exhausted: the request is dropped, its
+                # charged work stays on its row (conservation)
+                self._chaos["retry_exhausted"] += 1
+                self.incidents.append(
+                    f"tok={self._tokens_total} req={req.req_id} retry "
+                    f"budget exhausted after {e.attempts} attempts — "
+                    f"request dropped")
+                self._evacuate(req, active, queued, requeue=False)
+            else:
+                if req.tokens_done >= req.n_tokens:
+                    self._retire(req, active, done)
+            # arrivals during this token can be admitted mid-round;
+            # they join the next round's order
+            ingest()
+            self._admit(queued, active)
+
     # --------------------------------------------------------------- run
+
+    def _idle_advance(self, waiting: "deque[Request]",
+                      queued: "deque[Request]") -> None:
+        """Pool idle: fast-forward to the next arrival or the queue
+        head's re-admission backoff gate, whichever is sooner.  (The
+        gate matters: with every arrival drained and the head waiting
+        out a crash/preemption backoff, the old arrival-only
+        fast-forward had nothing to index.)"""
+        nxt = math.inf
+        if waiting:
+            nxt = min(nxt, waiting[0].arrival_s)
+        if queued:
+            nxt = min(nxt, queued[0].not_before_s)
+        if math.isfinite(nxt):
+            self.now = max(self.now, nxt)
 
     def run(self, requests: Sequence[Request]) -> dict:
         """Drive every request to completion; returns the report dict."""
@@ -579,32 +957,31 @@ class PoolScheduler:
             ingest()
             self._admit(queued, active)
             if not active:
-                # pool idle until the next arrival
-                self.now = max(self.now, waiting[0].arrival_s)
+                self._idle_advance(waiting, queued)
+                continue
+            self._thrash_check(active, queued)
+            if not active:   # pragma: no cover — guard preempts ≤ N-1
+                continue
+            order = self._round_order(active)
+            if self.fused and not self._chaos_round_pending(order):
+                self._run_round_fused(order, waiting, queued, active,
+                                      done, ingest)
                 continue
             if self.fused:
-                self._run_round_fused(self._round_order(active), waiting,
-                                      queued, active, done, ingest)
-                continue
-            for req in self._round_order(active):
-                if req.tokens_done >= req.n_tokens:
-                    # zero-token (or raced-complete) request: retire it
-                    # here, not via a decode, or the loop never drains
-                    self._retire(req, active, done)
-                    continue
-                self._decode_token(req)
-                if req.tokens_done >= req.n_tokens:
-                    self._retire(req, active, done)
-                # arrivals during this token can be admitted mid-round;
-                # they join the next round's order
-                ingest()
-                self._admit(queued, active)
+                # hazard live/due: degrade this round to per-token
+                self._chaos["degraded_rounds"] += 1
+            self._run_round_tokenwise(order, queued, active, done,
+                                      ingest)
         return self._result(done)
 
     # ------------------------------------------------------------ report
 
     def _result(self, done: list[Request]) -> dict:
         done = sorted(done, key=lambda r: r.req_id)
+        failed = sorted(self.failed, key=lambda r: r.req_id)
+        # conservation spans everything that consumed pool work —
+        # dropped requests keep their charged rows
+        accounted = done + failed
         decoded = [r for r in done if r.tokens_done > 0]
         lat = np.array([r.latency_s for r in done])
         ttft = np.array([r.first_token_s - r.arrival_s for r in decoded])
@@ -619,6 +996,10 @@ class PoolScheduler:
         seg_shared_hits = sum(s.shared_hits for s in self._sessions)
         seg_misses = sum(s.cache_misses for s in self._sessions)
         lookups = seg_local_hits + seg_shared_hits + seg_misses
+        chaos = dict(self._chaos)
+        chaos["admit_watermark_final"] = self.admit_watermark
+        if self.injector is not None:
+            chaos["injector"] = self.injector.stats()
         return {
             "policy": self.policy,
             "fused": self.fused,
@@ -647,12 +1028,17 @@ class PoolScheduler:
             "segment_misses": seg_misses,
             "shared_cache": self.shared_cache.stats(),
             "requests": [r.row() for r in done],
+            "n_failed": len(failed),
+            "failed_requests": [r.row() for r in failed],
+            "incidents": list(self.incidents),
+            "chaos": chaos,
             "conservation": {
-                "svm_wall_s": sum(r.svm_wall_s for r in done),
-                "migrations": sum(r.migrations for r in done),
-                "evictions": sum(r.evictions for r in done),
-                "bytes_migrated": sum(r.bytes_migrated for r in done),
-                "bytes_evicted": sum(r.bytes_evicted for r in done),
+                "svm_wall_s": sum(r.svm_wall_s for r in accounted),
+                "migrations": sum(r.migrations for r in accounted),
+                "evictions": sum(r.evictions for r in accounted),
+                "bytes_migrated": sum(r.bytes_migrated
+                                      for r in accounted),
+                "bytes_evicted": sum(r.bytes_evicted for r in accounted),
             },
             "mgr": m.summary(),
         }

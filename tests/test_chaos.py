@@ -1,0 +1,397 @@
+"""Chaos layer: fault injection, thrash-guard degradation, recovery.
+
+Covers: the seeded `FaultPlan`/`FaultInjector` bookkeeping, the public
+manager chaos hooks (`resize_capacity`, `arm_migration_faults`,
+`inject_latency`) including the fault-before-mutation guarantee, exact
+conservation of per-request accounting under every injected schedule
+(policy × hazard × seed), crash/preemption drain-and-resume, bounded
+retry with deterministic backoff charged to the simulated clock,
+retry-budget exhaustion dropping a request (and the empty-`done` report
+staying well-formed), the thrash guard's preempt-and-tighten ladder, the
+fused-divergence guard's per-token fallback, cross-tier byte-identity of
+whole chaos runs (fused ≡ per-token ≡ scalar), and the 64-request
+acceptance schedule with bit-identical reruns."""
+
+import numpy as np
+import pytest
+
+from repro.core import MB, AddressSpace, MigrationError, SVMManager
+from repro.ft.retry import RetryPolicy
+from repro.svm import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    ModelSpec,
+    PoolScheduler,
+    make_requests,
+)
+
+SPEC_A = ModelSpec.synthetic("archA", 6, 2 * MB, embed_bytes=4 * MB)
+SPEC_B = ModelSpec.synthetic("archB", 10, 2 * MB, embed_bytes=6 * MB)
+
+# the bench_engine.py gate mix: archA fits the pool, archB is
+# individually oversubscribed
+GATE_SPECS = [
+    ModelSpec.synthetic("archA", 12, 4 * MB, embed_bytes=8 * MB),
+    ModelSpec.synthetic("archB", 24, 4 * MB, embed_bytes=24 * MB),
+]
+GATE_CAP = 100 * MB
+
+
+def chaos_run(policy="fifo", *, n=10, tokens=8, plan_seed=1, cap=30 * MB,
+              specs=(SPEC_A, SPEC_B), plan=None, **kw):
+    reqs = make_requests(list(specs), n, seed=2, tokens=tokens)
+    if plan is None:
+        plan = FaultPlan.default(plan_seed, n_requests=n, tokens=tokens)
+    sched = PoolScheduler(cap, policy=policy, fault_plan=plan, **kw)
+    return sched.run(reqs)
+
+
+def assert_conserved(r):
+    c, m = r["conservation"], r["mgr"]
+    assert c["svm_wall_s"] == pytest.approx(m["wall_s"], abs=1e-9)
+    assert c["migrations"] == m["migrations"]
+    assert c["evictions"] == m["evictions"]
+    assert c["bytes_migrated"] == m["bytes_migrated"]
+    assert c["bytes_evicted"] == m["bytes_evicted"]
+
+
+# ------------------------------------------------------- plan / injector
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown hazard"):
+        FaultEvent(0, "meteor_strike")
+    with pytest.raises(ValueError, match="at_tokens"):
+        FaultEvent(-1, "crash")
+    with pytest.raises(ValueError, match="frac"):
+        FaultEvent(0, "slow_page", frac=0.0)
+
+
+def test_default_plan_is_seeded_and_bounded():
+    p1 = FaultPlan.default(7, n_requests=16, tokens=8)
+    p2 = FaultPlan.default(7, n_requests=16, tokens=8)
+    p3 = FaultPlan.default(8, n_requests=16, tokens=8)
+    assert p1 == p2
+    assert p1 != p3
+    horizon = 16 * 8
+    kinds = [e.kind for e in p1.events]
+    assert kinds.count("capacity_loss") == 1
+    assert kinds.count("capacity_restore") == 1
+    assert kinds.count("slow_page") == 1
+    assert kinds.count("slow_page_end") == 1
+    assert kinds.count("crash") == 1
+    assert kinds.count("migration_fault") == 3
+    # everything lands inside the token horizon, so the plan fully fires
+    assert all(e.at_tokens <= horizon for e in p1.events)
+    # intensity scales the migration-fault count
+    p4 = FaultPlan.default(7, n_requests=16, tokens=8, intensity=2.0)
+    assert [e.kind for e in p4.events].count("migration_fault") == 6
+
+
+def test_injector_pumps_in_order():
+    plan = FaultPlan(events=(
+        FaultEvent(5, "slow_page", frac=2.0),
+        FaultEvent(5, "migration_fault"),
+        FaultEvent(5, "crash"),
+        FaultEvent(9, "slow_page_end"),
+    ))
+    inj = FaultInjector(plan)
+    assert inj.next_at() == 5
+    assert inj.due_env(4) == []
+    env = inj.due_env(5)
+    assert [e.kind for e in env] == ["slow_page"]
+    # token events pop one per decoded token, so a burst lands on
+    # consecutive tokens instead of collapsing
+    assert inj.pop_token_event(5).kind == "crash"
+    assert inj.pop_token_event(5).kind == "migration_fault"
+    assert inj.pop_token_event(5) is None
+    assert inj.remaining == 1
+    assert inj.next_at() == 9
+    assert inj.due_env(9)[0].kind == "slow_page_end"
+    assert inj.remaining == 0
+    assert inj.next_at() == float("inf")
+    assert inj.stats()["events_applied"] == 4
+
+
+# ------------------------------------------------------- manager hooks
+
+def make_mgr(cap=16 * MB, n=8, size=2 * MB, policy="lrf"):
+    # the space's capacity IS the device pool size; allocations may
+    # oversubscribe it (that is the paper's whole premise)
+    space = AddressSpace(cap, alignment=2 * MB)
+    for i in range(n):
+        space.alloc(size, f"a{i}")
+    return SVMManager(space, policy=policy, profile=False)
+
+
+def test_resize_capacity_emergency_evicts():
+    m = make_mgr(cap=8 * MB, n=4)
+    for rid in range(4):
+        m.touch(rid)
+    assert m.free == 0
+    ev0, w0 = m.n_evictions, m.wall
+    w = m.resize_capacity(4 * MB)
+    assert m.capacity == 4 * MB
+    assert m.n_evictions - ev0 == 2       # two 2MB victims out
+    assert m.free == 0
+    assert w > 0.0 and m.wall == pytest.approx(w0 + w)
+    # growing back frees headroom without touching residency
+    ev1 = m.n_evictions
+    assert m.resize_capacity(8 * MB) == 0.0
+    assert m.free == 4 * MB and m.n_evictions == ev1
+    with pytest.raises(ValueError):
+        m.resize_capacity(0)
+
+
+def test_armed_migration_fault_raises_before_any_mutation():
+    m = make_mgr()
+    m.touch(0)
+    snap = (m.wall, m.n_migrations, m.n_evictions, m.bytes_migrated,
+            m.free, frozenset(m.resident), m.cost.total())
+    m.arm_migration_faults(1)
+    with pytest.raises(MigrationError):
+        m.touch(1)
+    assert (m.wall, m.n_migrations, m.n_evictions, m.bytes_migrated,
+            m.free, frozenset(m.resident), m.cost.total()) == snap
+    assert m.migration_faults == 1 and m.fault_armed == 0
+    # disarmed: the retry succeeds and mutates normally
+    assert m.touch(1) is False and 1 in m.resident
+
+
+def test_inject_latency_ledgers_chaos_wall():
+    m = make_mgr()
+    w0 = m.wall
+    m.inject_latency(0.25)
+    assert m.wall == pytest.approx(w0 + 0.25)
+    assert m.chaos_wall == pytest.approx(0.25)
+    assert m.summary()["chaos_wall_s"] == pytest.approx(0.25)
+
+
+# ------------------------------------- conservation under every schedule
+
+@pytest.mark.parametrize("policy", ["fifo", "admission", "svm_aware"])
+@pytest.mark.parametrize("seed", [0, 1, 3])
+def test_conservation_policy_x_hazard_x_seed(policy, seed):
+    r = chaos_run(policy, plan_seed=seed, thrash_watermark=3.0,
+                  thrash_window=16)
+    assert_conserved(r)
+    # the whole plan fired and nothing leaked unrecovered
+    assert r["chaos"]["injector"]["events_remaining"] == 0
+    assert r["n_requests"] + r["n_failed"] == 10
+
+
+def test_single_hazard_class_runs_conserve():
+    hazards = {
+        "capacity": (FaultEvent(4, "capacity_loss", frac=0.6),
+                     FaultEvent(20, "capacity_restore")),
+        "slow_page": (FaultEvent(4, "slow_page", frac=4.0),
+                      FaultEvent(20, "slow_page_end")),
+        "migration_fault": (FaultEvent(4, "migration_fault",
+                                       fail_attempts=2),),
+        "crash": (FaultEvent(4, "crash"),),
+    }
+    for name, events in hazards.items():
+        r = chaos_run("fifo", plan=FaultPlan(events=events, name=name))
+        assert_conserved(r)
+        assert r["chaos"]["injector"]["events_remaining"] == 0
+        assert r["n_failed"] == 0, name
+        assert all(q["tokens"] == 8 for q in r["requests"]), name
+
+
+# --------------------------------------------------- recovery behaviours
+
+def test_migration_fault_recovers_via_bounded_retry():
+    plan = FaultPlan(events=(FaultEvent(2, "migration_fault",
+                                        fail_attempts=2),))
+    policy = RetryPolicy(max_attempts=4, base_delay_s=1e-3)
+    r = chaos_run("fifo", plan=plan, retry_policy=policy)
+    ch = r["chaos"]
+    assert ch["migration_faults"] == 1
+    assert ch["retries"] == 2
+    assert ch["retry_exhausted"] == 0
+    # deterministic exponential backoff, charged to the simulated clock
+    assert ch["backoff_wall_s"] == pytest.approx(
+        policy.delay(1) + policy.delay(2))
+    assert r["mgr"]["chaos_wall_s"] >= ch["backoff_wall_s"]
+    rows = [q for q in r["requests"] if q["faults"]]
+    assert len(rows) == 1
+    assert rows[0]["retries"] == 2
+    assert rows[0]["backoff_s"] == pytest.approx(ch["backoff_wall_s"])
+    assert_conserved(r)
+
+
+def test_retry_exhaustion_drops_request_and_report_stays_well_formed():
+    # one request, an unrecoverable fault at its first token: `done`
+    # ends up empty — the report must still be well-formed with zeroed
+    # latency rows (regression: the old idle fast-forward IndexError'd
+    # and percentiles assumed a non-empty set)
+    plan = FaultPlan(events=(FaultEvent(0, "migration_fault",
+                                        fail_attempts=99),))
+    reqs = make_requests([SPEC_B], 1, seed=0, tokens=4)
+    sched = PoolScheduler(8 * MB, policy="fifo", fault_plan=plan,
+                          retry_policy=RetryPolicy(max_attempts=3,
+                                                   base_delay_s=1e-4))
+    r = sched.run(reqs)
+    assert r["n_requests"] == 0 and r["n_failed"] == 1
+    assert r["latency_p50_s"] == 0.0 and r["ttft_p99_s"] == 0.0
+    assert r["queue_wait_mean_s"] == 0.0
+    assert r["agg_tok_s"] == 0.0 or r["total_tokens"] == 0
+    assert r["chaos"]["retry_exhausted"] == 1
+    assert r["chaos"]["retries"] == 2          # max_attempts - 1 backoffs
+    row = r["failed_requests"][0]
+    assert row["failed"] is True and row["tokens"] == 0
+    # the dropped request keeps its charged work — conservation spans it
+    assert_conserved(r)
+    assert any("retry budget exhausted" in s for s in r["incidents"])
+
+
+def test_crash_drains_and_resumes_byte_identically():
+    plan = FaultPlan(events=(FaultEvent(6, "crash"),))
+    r = chaos_run("fifo", plan=plan)
+    ch = r["chaos"]
+    assert ch["crashes"] == 1 and ch["resumes"] == 1
+    crashed = [q for q in r["requests"] if q["crashes"]]
+    assert len(crashed) == 1
+    # the crashed request still decoded every token after resuming from
+    # its carried TraceSession state
+    assert crashed[0]["tokens"] == 8
+    assert crashed[0]["resumes"] == 1
+    assert r["n_failed"] == 0
+    assert_conserved(r)
+    # same plan, same mix => bit-identical rerun
+    r2 = chaos_run("fifo", plan=plan)
+    assert r["requests"] == r2["requests"]
+    assert r["makespan_s"] == r2["makespan_s"]
+
+
+def test_slow_page_window_charges_multiplicative_surcharge():
+    base = chaos_run("fifo", plan=FaultPlan(events=()))
+    slow = chaos_run("fifo", plan=FaultPlan(events=(
+        FaultEvent(4, "slow_page", frac=4.0),
+        FaultEvent(30, "slow_page_end"))))
+    assert slow["chaos"]["slow_page_windows"] == 1
+    assert slow["mgr"]["chaos_wall_s"] > 0.0
+    assert slow["makespan_s"] > base["makespan_s"]
+    assert_conserved(slow)
+
+
+def test_capacity_loss_forces_emergency_evictions_and_tightens_admission():
+    plan = FaultPlan(events=(FaultEvent(4, "capacity_loss", frac=0.5),
+                             FaultEvent(40, "capacity_restore")))
+    r = chaos_run("admission", plan=plan)
+    assert r["chaos"]["capacity_events"] == 2
+    assert any("capacity_loss" in s for s in r["incidents"])
+    # pool back at nominal by the end
+    assert r["mgr"]["capacity_bytes"] == 30 * MB
+    assert r["n_failed"] == 0
+    assert_conserved(r)
+
+
+# ------------------------------------------------------- runtime guards
+
+def test_thrash_guard_preempts_and_tightens():
+    reqs = make_requests(GATE_SPECS, 8, seed=0, tokens=12)
+    sched = PoolScheduler(GATE_CAP, policy="fifo",
+                          thrash_watermark=0.5, thrash_window=16)
+    r = sched.run(reqs)
+    ch = r["chaos"]
+    assert ch["thrash_trips"] >= 1
+    assert ch["preemptions"] == ch["thrash_trips"]
+    assert ch["resumes"] >= 1
+    assert ch["admit_watermark_final"] < 1.0
+    assert any("thrash-guard trip" in s for s in r["incidents"])
+    # every preempted tenant resumed and finished
+    assert r["n_requests"] == 8 and r["n_failed"] == 0
+    assert all(q["tokens"] == 12 for q in r["requests"])
+    assert_conserved(r)
+    # deterministic: the guard keys off counters, not the host clock
+    reqs2 = make_requests(GATE_SPECS, 8, seed=0, tokens=12)
+    sched2 = PoolScheduler(GATE_CAP, policy="fifo",
+                           thrash_watermark=0.5, thrash_window=16)
+    r2 = sched2.run(reqs2)
+    assert r["requests"] == r2["requests"]
+
+
+def test_thrash_guard_off_by_default_changes_nothing():
+    reqs = make_requests(GATE_SPECS, 8, seed=0, tokens=8)
+    base = PoolScheduler(GATE_CAP, policy="fifo").run(reqs)
+    assert base["chaos"]["thrash_trips"] == 0
+    assert base["chaos"]["preemptions"] == 0
+
+
+def test_fused_divergence_guard_falls_back_per_token():
+    reqs = make_requests([SPEC_A], 4, seed=0, tokens=4)
+    sched = PoolScheduler(64 * MB, policy="fifo")
+    # corrupt every multi-segment concat: drop the last member, so the
+    # cut prefix sums cannot match the block's segment totals
+    real_concat = sched._concat_round
+    def bad_concat(segs):
+        return real_concat(segs[:-1])
+    sched._concat_round = bad_concat
+    r = sched.run(reqs)
+    assert r["chaos"]["fused_fallbacks"] >= 1
+    assert any("fused divergence" in s for s in r["incidents"])
+    # the golden fallback decoded everything and conservation held
+    assert all(q["tokens"] == 4 for q in r["requests"])
+    assert_conserved(r)
+    # identical to an honest per-token run: the guard fired before
+    # anything executed, so there is no double charge
+    reqs2 = make_requests([SPEC_A], 4, seed=0, tokens=4)
+    honest = PoolScheduler(64 * MB, policy="fifo", fused=False).run(reqs2)
+    assert r["requests"] == honest["requests"]
+
+
+def test_fused_diverged_structural_check():
+    segs = [list(range(3)), list(range(5))]   # only len() matters
+    mega = list(range(8))
+    good = np.array([3, 8], dtype=np.int64)
+    assert not PoolScheduler._fused_diverged(segs, mega, good)
+    assert PoolScheduler._fused_diverged(segs, mega,
+                                         np.array([3], dtype=np.int64))
+    assert PoolScheduler._fused_diverged(segs, mega,
+                                         np.array([4, 8], dtype=np.int64))
+    assert PoolScheduler._fused_diverged(segs, mega,
+                                         np.array([3, 7], dtype=np.int64))
+
+
+# --------------------------------------------- cross-tier byte-identity
+
+def test_chaos_run_identical_across_engine_tiers():
+    runs = [chaos_run("fifo", fused=True),
+            chaos_run("fifo", fused=False),
+            chaos_run("fifo", fused=False, scalar=True)]
+    rows = [r["requests"] + r["failed_requests"] for r in runs]
+    assert rows[0] == rows[1] == rows[2]
+    assert runs[0]["makespan_s"] == runs[1]["makespan_s"] \
+        == runs[2]["makespan_s"]
+    assert runs[0]["mgr"]["wall_s"] == runs[1]["mgr"]["wall_s"] \
+        == runs[2]["mgr"]["wall_s"]
+
+
+# ------------------------------------------------- acceptance: 64 reqs
+
+def test_acceptance_64_request_chaos_schedule():
+    def go():
+        reqs = make_requests(GATE_SPECS, 64, seed=0, tokens=8,
+                             mean_interarrival_s=2e-3)
+        plan = FaultPlan.default(0, n_requests=64, tokens=8)
+        sched = PoolScheduler(GATE_CAP, policy="svm_aware",
+                              fault_plan=plan, thrash_watermark=3.0,
+                              thrash_window=32)
+        return sched.run(reqs)
+    r = go()
+    # completes with zero unhandled faults: plan fully applied, nothing
+    # left armed, no retry budget blown
+    assert r["chaos"]["injector"]["events_remaining"] == 0
+    assert r["chaos"]["retry_exhausted"] == 0
+    assert r["n_requests"] + r["n_failed"] == 64
+    assert r["n_failed"] == 0
+    assert all(q["tokens"] == 8 for q in r["requests"])
+    assert r["chaos"]["crashes"] == 1 and r["chaos"]["resumes"] >= 1
+    assert_conserved(r)
+    # bit-identical rerun under the same seed
+    r2 = go()
+    assert r["requests"] == r2["requests"]
+    assert r["incidents"] == r2["incidents"]
+    assert r["makespan_s"] == r2["makespan_s"]
+    assert r["chaos"] == r2["chaos"]

@@ -1,0 +1,161 @@
+"""Shared bounded-retry utility (`repro.ft.retry`) and its adopters.
+
+Covers: the pure deterministic backoff schedule, `retry_call` semantics
+(1-based attempts, backoff callbacks, `RetryError` chaining on
+exhaustion), the incremental `RetryBudget` ledger, and the migration of
+`TrainSupervisor` / `StragglerMonitor` onto the shared primitive —
+restart counts pinned, backoff schedules bit-identical across reruns."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.ft import (
+    RetryBudget,
+    RetryError,
+    RetryPolicy,
+    StragglerMonitor,
+    TrainSupervisor,
+    retry_call,
+)
+
+# ------------------------------------------------------------- policy
+
+def test_policy_schedule_is_pure_and_capped():
+    p = RetryPolicy(max_attempts=4, base_delay_s=0.5, factor=2.0,
+                    max_delay_s=1.5)
+    assert p.delay(1) == 0.5
+    assert p.delay(2) == 1.0
+    assert p.delay(3) == 1.5            # capped
+    assert p.schedule() == (0.5, 1.0, 1.5)
+    assert p.schedule() == p.schedule()  # pure: no RNG, no clock
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_delay_s=-1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(factor=0.0)
+
+
+# ---------------------------------------------------------- retry_call
+
+def test_retry_call_succeeds_after_transient_failures():
+    p = RetryPolicy(max_attempts=4, base_delay_s=0.1)
+    seen, backoffs = [], []
+
+    def flaky(attempt):
+        seen.append(attempt)
+        if attempt <= 2:
+            raise OSError("transient")
+        return "ok"
+
+    out = retry_call(flaky, policy=p, retry_on=(OSError,),
+                     on_backoff=lambda a, d: backoffs.append((a, d)))
+    assert out == "ok"
+    assert seen == [1, 2, 3]
+    assert backoffs == [(1, 0.1), (2, 0.2)]
+
+
+def test_retry_call_exhaustion_raises_chained_retry_error():
+    p = RetryPolicy(max_attempts=3, base_delay_s=0.0)
+
+    def always(attempt):
+        raise OSError(f"attempt {attempt}")
+
+    with pytest.raises(RetryError) as ei:
+        retry_call(always, policy=p, retry_on=(OSError,))
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last, OSError)
+    assert isinstance(ei.value.__cause__, OSError)
+
+
+def test_retry_call_does_not_swallow_foreign_exceptions():
+    def bad(attempt):
+        raise ValueError("not retryable")
+    with pytest.raises(ValueError):
+        retry_call(bad, retry_on=(OSError,))
+
+
+# --------------------------------------------------------- RetryBudget
+
+def test_budget_ledger_and_reset():
+    b = RetryBudget(RetryPolicy(max_attempts=3, base_delay_s=1.0))
+    assert b.remaining == 3 and not b.exhausted
+    assert b.spend() == 1.0
+    assert b.spend() == 2.0
+    assert b.remaining == 1 and not b.exhausted
+    assert b.spend() == 4.0
+    assert b.exhausted and b.remaining == 0
+    assert b.backoff_s == pytest.approx(7.0)
+    b.reset()
+    assert not b.exhausted and b.attempts == 0
+    # the cumulative backoff ledger survives a re-arm
+    assert b.backoff_s == pytest.approx(7.0)
+
+
+# --------------------------------------------- supervisor on the budget
+
+def run_supervisor(tmp_path, n_failures, max_restarts=3):
+    ckpt = CheckpointManager(str(tmp_path), keep=3, every=2)
+    sup = TrainSupervisor(ckpt, max_restarts=max_restarts)
+    state0 = {"x": jnp.zeros((), jnp.float32)}
+    left = {"n": n_failures}
+
+    def injector(step):
+        if step == 5 and left["n"] > 0:
+            left["n"] -= 1
+            raise RuntimeError("simulated node failure")
+
+    final_step, state = sup.run(state0, lambda s, st: {"x": st["x"] + 1.0},
+                                steps=8, failure_injector=injector)
+    return sup, final_step, state
+
+
+def test_supervisor_restart_count_pinned(tmp_path):
+    sup, final_step, state = run_supervisor(tmp_path, n_failures=2,
+                                            max_restarts=3)
+    assert final_step == 8 and float(state["x"]) == 8.0
+    assert sup.restarts == 2
+    assert sup.budget.remaining == 1
+
+
+def test_supervisor_budget_exhaustion_reraises_original(tmp_path):
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        run_supervisor(tmp_path, n_failures=99, max_restarts=2)
+
+
+def test_supervisor_backoff_schedule_deterministic(tmp_path):
+    sup1, _, _ = run_supervisor(tmp_path / "a", n_failures=2)
+    sup2, _, _ = run_supervisor(tmp_path / "b", n_failures=2)
+    assert sup1.budget.backoff_s == sup2.budget.backoff_s
+    assert sup1.budget.backoff_s == pytest.approx(
+        sum(sup1.budget.policy.schedule()[:2]))
+    backoffs1 = [m for m in sup1.log if m.startswith("backoff")]
+    backoffs2 = [m for m in sup2.log if m.startswith("backoff")]
+    assert backoffs1 == backoffs2 and len(backoffs1) == 2
+
+
+# ----------------------------------------- straggler monitor on budgets
+
+def test_straggler_strikes_ride_retry_budget():
+    mon = StragglerMonitor(threshold=1.5, patience=3)
+
+    def step(slow):
+        mon.record(0, 1.0)
+        mon.record(1, 1.0)
+        mon.record(2, 3.0 if slow else 1.0)
+        return mon.flagged()
+
+    assert step(True) == []
+    assert step(True) == []
+    assert mon.strikes[2] == 2
+    assert step(False) == []      # host recovers: its budget re-arms
+    assert mon.strikes[2] == 0
+    out = []
+    for _ in range(3):
+        out = step(True)
+    assert out == [2]
+    assert mon.strikes[0] == 0 and mon.strikes[1] == 0

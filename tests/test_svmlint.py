@@ -37,9 +37,9 @@ def rules_of(findings):
 
 # -------------------------------------------------------------- framework
 
-def test_registry_has_the_five_contract_rules():
+def test_registry_has_the_contract_rules():
     assert {"opcode-exhaustive", "frozen-mutation", "manager-encapsulation",
-            "determinism", "counter-pairing"} <= set(RULES)
+            "determinism", "counter-pairing", "bounded-retry"} <= set(RULES)
     for rule in RULES.values():
         assert rule.doc and rule.invariant
 
@@ -315,6 +315,89 @@ def run_block(mega, mgr, cuts):
 def test_reads_without_replay_ignored():
     assert lint_source(
         "def report(mgr):\n    return mgr.wall\n", SVM) == []
+
+
+# ---------------------------------------------------------- bounded-retry
+
+def test_unbounded_swallowing_retry_loop_flagged():
+    findings = lint_source("""
+def recover(job):
+    while True:
+        try:
+            return job()
+        except OSError:
+            continue
+""", SVM)
+    assert rules_of(findings) == ["bounded-retry"]
+    assert "repro.ft.retry" in findings[0].message
+
+
+def test_retry_loop_that_reraises_passes():
+    assert lint_source("""
+def recover(job):
+    while True:
+        try:
+            return job()
+        except OSError:
+            log("transient")
+            raise
+""", SVM) == []
+
+
+def test_retry_loop_with_attempt_counter_passes():
+    assert lint_source("""
+def recover(job):
+    attempts = 0
+    while True:
+        try:
+            return job()
+        except OSError:
+            attempts += 1
+            if attempts >= 3:
+                raise
+""", SVM) == []
+
+
+def test_retry_loop_spending_a_budget_passes():
+    assert lint_source("""
+def recover(self, job):
+    while True:
+        try:
+            return job()
+        except OSError:
+            self.budget.spend()
+""", SVM) == []
+
+
+def test_for_loop_retry_passes():
+    # a for-loop is bounded by construction; the shared retry_call
+    # helper is built on exactly this shape
+    assert lint_source("""
+def recover(job):
+    for _ in range(4):
+        try:
+            return job()
+        except OSError:
+            continue
+""", SVM) == []
+
+
+def test_nested_function_loop_is_its_own_scope():
+    # the budget name lives in the *inner* function; the outer while
+    # has no handler of its own and must not be flagged
+    findings = lint_source("""
+def outer(jobs):
+    while jobs:
+        job = jobs.pop()
+
+        def attempt():
+            try:
+                return job()
+            except OSError:
+                return None
+        attempt()
+""", SVM)
+    assert findings == []
 
 
 # ------------------------------------------------------------ suppressions

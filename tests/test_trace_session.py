@@ -315,3 +315,74 @@ def test_runtime_layer_never_drives_manager_directly():
         [os.path.join(root, "svm"), os.path.join(root, "launch")],
         rules=["manager-encapsulation"])
     assert not findings, "\n".join(f.format() for f in findings)
+
+
+# ----------------------------------- preempt / drain / resume (chaos layer)
+
+def _preempt_cycle(policy: str, scalar: bool) -> SVMManager:
+    """One preempt/drain/resume cycle as the chaos scheduler drives it:
+    pin, decode tokens, eagerly drain (unpin + writeback + flush),
+    decode again from the carried session state."""
+    space = AddressSpace(8 * MB, base=0, alignment=2 * MB)
+    for i in range(8):                     # 16 MB of ranges on an 8 MB pool
+        space.alloc(2 * MB, f"a{i}")
+    mgr = SVMManager(space, policy=policy, profile=False)
+    sess = TraceSession(mgr, scalar=scalar)
+
+    def rec(s):
+        for rid in range(8):
+            s.touch(rid, concurrency=4)
+        s.compute(1e-4)
+
+    sess.pin(0)
+    sess.flush()
+    for _ in range(3):
+        sess.run("tok", rec)
+    # eager drain: exactly PoolScheduler._evacuate's op sequence
+    sess.unpin(0)
+    for rid in range(8):
+        sess.writeback(rid)
+    sess.flush()
+    for _ in range(3):                     # resume: same compiled segment
+        sess.run("tok", rec)
+    return mgr
+
+
+@pytest.mark.parametrize("policy", ("lrf", "clock", "lru"))
+def test_preempt_drain_resume_byte_identical(policy):
+    """A drained-and-resumed session replays byte-identically in scalar
+    and batched mode: residency, clocks, and ledgers all carry across
+    the preemption cycle regardless of eviction policy."""
+    a = _preempt_cycle(policy, scalar=False)
+    b = _preempt_cycle(policy, scalar=True)
+    assert a.summary() == b.summary()
+    assert sorted(a.resident) == sorted(b.resident)
+    # the drain really evicted: writebacks count as evictions
+    assert a.n_evictions > 0
+
+
+def test_replay_scalar_matches_replay():
+    """`TraceSession.replay_scalar` (the chaos layer's golden path for
+    fault-armed tokens) is byte-identical to the batched `replay` of the
+    same compiled segment."""
+    def run(use_scalar: bool) -> SVMManager:
+        space = AddressSpace(8 * MB, base=0, alignment=2 * MB)
+        for i in range(8):
+            space.alloc(2 * MB, f"a{i}")
+        mgr = SVMManager(space, policy="lrf", profile=False)
+        sess = TraceSession(mgr)
+
+        def rec(s):
+            for rid in range(8):
+                s.touch(rid, concurrency=4)
+            s.compute(1e-4)
+
+        ct = sess.fetch("tok", rec)
+        for _ in range(4):
+            if use_scalar:
+                sess.replay_scalar(ct)
+            else:
+                sess.replay(ct)
+        return mgr
+
+    assert run(True).summary() == run(False).summary()
