@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke bench-engine bench-gates chaos-smoke docs-check
+.PHONY: test lint bench bench-smoke bench-engine bench-gates chaos-smoke bench-scale docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -28,6 +28,11 @@ bench-gates:
 # faults, exact conservation, bit-identical rerun (docs/robustness.md)
 chaos-smoke:
 	$(PY) benchmarks/chaos_smoke.py
+
+# CI scale gate: 1024-request vectorized schedule — window tier engaged,
+# wall budget held, byte-identity vs per-token on a subsampled prefix
+bench-scale:
+	$(PY) benchmarks/scale_smoke.py
 
 # fail if any docs/ internal link or README anchor is broken
 docs-check:

@@ -1,0 +1,126 @@
+"""Scale smoke: the 1024-request vectorized schedule, end to end.
+
+CI gate for the vectorized scheduler core (docs/architecture.md): the
+`scheduler_scale` bench configuration — 1024 requests over two repeated
+architectures, burst arrival, ~2.3M replayed ops — runs on the
+vectorized tier.  The run must
+
+  * complete every request (no failures, full token budget decoded)
+    inside a generous host wall budget — a hung window loop or a
+    quadratic regression blows the budget long before CI times out,
+  * actually engage the multi-round window tier (>= 1 window pass
+    covering >= 2 rounds each) — otherwise the smoke would measure the
+    per-round regime and silently stop covering the window code path,
+  * be **byte-identical** to the per-token reference loop on a
+    subsampled prefix of the same schedule (the full per-token run is
+    the expensive half of the bench; the prefix keeps smoke wall small
+    while still crossing admission, eviction sweeps, and retirement).
+
+Exit status is nonzero on any violation, so `make bench-scale` can sit
+in CI next to `chaos-smoke`.
+
+Usage:  PYTHONPATH=src python benchmarks/scale_smoke.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import MB  # noqa: E402
+from repro.svm import ModelSpec, PoolScheduler, make_requests  # noqa: E402
+
+REQUESTS = 1024
+PREFIX = 128            # identity check subsample
+TOKENS = 110
+CAP = 6000 * MB
+WALL_BUDGET_S = 60.0    # measured ~0.4s on the reference box
+
+_checks: list[str] = []
+
+
+def check(ok: bool, what: str) -> None:
+    _checks.append(f"{'ok  ' if ok else 'FAIL'} {what}")
+    if not ok:
+        print("\n".join(_checks))
+        print(f"scale-smoke: FAIL ({what})")
+        sys.exit(1)
+
+
+def specs() -> list[ModelSpec]:
+    return [ModelSpec.synthetic("archA", 6, 2 * MB, embed_bytes=4 * MB),
+            ModelSpec.synthetic("archB", 10, 2 * MB, embed_bytes=6 * MB)]
+
+
+def strip(r: dict) -> dict:
+    """Drop execution-mode markers; everything else must match bytewise."""
+    r = dict(r)
+    r.pop("fused")
+    sc = dict(r["shared_cache"])
+    for k in ("shared_concats", "concat_memo_entries",
+              "concat_memo_evictions"):
+        sc.pop(k)
+    r["shared_cache"] = sc
+    return r
+
+
+def run(reqs, *, fused: bool):
+    sched = PoolScheduler(CAP, policy="svm_aware", pin_frac=0.4,
+                          fused=fused)
+    r = sched.run([dataclasses.replace(q) for q in reqs])
+    ops = sum(s.ops_replayed for s in sched._sessions)
+    return r, ops
+
+
+def main() -> None:
+    reqs = make_requests(specs(), REQUESTS, seed=5, tokens=TOKENS,
+                         arrival="burst", spec_choice="roundrobin")
+
+    # spy on the window tier so the smoke fails loudly if a future
+    # change makes the guards reject every window on this schedule
+    windows = {"passes": 0, "rounds": 0}
+    orig = PoolScheduler._run_window_fused
+
+    def spy(self, order, r, *a, **kw):
+        windows["passes"] += 1
+        windows["rounds"] += r
+        return orig(self, order, r, *a, **kw)
+
+    PoolScheduler._run_window_fused = spy
+    try:
+        t0 = time.perf_counter()
+        r_full, ops = run(reqs, fused=True)
+        host_s = time.perf_counter() - t0
+    finally:
+        PoolScheduler._run_window_fused = orig
+
+    check(r_full["n_failed"] == 0 and r_full["n_requests"] == REQUESTS,
+          f"all {REQUESTS} requests completed")
+    check(all(q["tokens"] == TOKENS for q in r_full["requests"]),
+          f"every request decoded {TOKENS}/{TOKENS} tokens")
+    check(ops >= 2_000_000, f"schedule replayed {ops} ops (>= 2M)")
+    check(windows["passes"] >= 1 and windows["rounds"]
+          >= 2 * windows["passes"],
+          f"window tier engaged ({windows['passes']} passes / "
+          f"{windows['rounds']} rounds)")
+    check(host_s <= WALL_BUDGET_S,
+          f"host wall {host_s:.2f}s within {WALL_BUDGET_S:.0f}s budget")
+
+    prefix = reqs[:PREFIX]
+    r_vec, _ = run(prefix, fused=True)
+    r_ref, _ = run(prefix, fused=False)
+    check(strip(r_vec) == strip(r_ref),
+          f"{PREFIX}-request prefix byte-identical to per-token replay")
+
+    print("\n".join(_checks))
+    print(f"scale-smoke: PASS — {REQUESTS} requests x {TOKENS} tokens, "
+          f"{ops} ops, {windows['passes']} window passes "
+          f"({windows['rounds']} fused rounds), {host_s:.2f}s host")
+
+
+if __name__ == "__main__":
+    main()

@@ -588,3 +588,81 @@ class BoundedRetry(Rule):
                 "retry loop swallows exceptions with no bounded attempt "
                 "budget in scope — use repro.ft.retry (retry_call / "
                 "RetryBudget) or reference an explicit attempt counter")
+
+
+# --------------------------------------------------------------- hot-loop
+
+#: per-op column identifiers (flat op columns and their derived
+#: touch-stream views) — the arrays whose length scales with trace ops
+_OP_COLUMN_NAMES = frozenset({
+    "codes", "rids", "concs", "hints", "fargs",
+    "tpos", "trid", "tpos_np", "trid_np",
+    "touch_pos", "touch_rid", "touch_pos_np", "touch_rid_np",
+})
+
+
+def _op_columns_iterated(it: ast.expr) -> set[str]:
+    """Op-column names a for-loop's iterable walks per element.
+
+    Sees through ``enumerate``/``zip``/``reversed`` wrappers and
+    ``.tolist()`` — but deliberately not ``range(...)``: an index loop's
+    body is usually O(1) per *miss or victim*, not per op, and the
+    sequential reference paths that do scale per op iterate the column
+    itself."""
+    out: set[str] = set()
+
+    def scan(expr: ast.expr) -> None:
+        if isinstance(expr, ast.Call):
+            f = expr.func
+            fname = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else None)
+            if fname in ("enumerate", "zip", "reversed"):
+                for a in expr.args:
+                    scan(a)
+            elif fname == "tolist" and isinstance(f, ast.Attribute):
+                scan(f.value)
+            return
+        chain = attr_chain(expr)
+        if chain is not None:
+            tail = chain.rsplit(".", 1)[-1]
+            if tail in _OP_COLUMN_NAMES:
+                out.add(tail)
+
+    scan(it)
+    return out
+
+
+@register_rule
+class HotLoop(Rule):
+    name = "hot-loop"
+    doc = ("engine execute/fold functions must not iterate op-column "
+           "arrays in per-op Python for loops")
+    invariant = ("engine hot paths are single-pass NumPy column "
+                 "operations (cumsum/searchsorted/reduceat-free ordinal "
+                 "sweeps); a Python for loop over an op column scales "
+                 "wall time with trace length, which the fused tiers "
+                 "exist to avoid — sequential reference paths live in "
+                 "dedicated `_phase_a_*` oracles, not execute/fold "
+                 "functions")
+    scope = ("repro.core",)
+
+    def check(self, mod: LintModule):
+        if os.path.basename(mod.path) != "engine.py":
+            return
+        for fn, qualname in walk_functions(mod.tree):
+            leaf = qualname.rsplit(".", 1)[-1]
+            if "execute" not in leaf and "fold" not in leaf:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.For):
+                    continue
+                cols = _op_columns_iterated(node.iter)
+                if cols:
+                    yield Finding(
+                        self.name, mod.path, node.lineno,
+                        node.col_offset,
+                        f"per-op Python loop over op column(s) "
+                        f"{', '.join(sorted(cols))} in hot function "
+                        f"{qualname!r} — vectorise (column ops / "
+                        f"cumsum folds) or move the sequential walk to "
+                        f"a reference oracle")

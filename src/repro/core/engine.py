@@ -230,13 +230,73 @@ class CompiledTrace:
             seg_bounds=offs,
         ).freeze()
 
+    def tile(self, reps: int) -> "CompiledTrace":
+        """``reps`` copies of this trace back-to-back — ``concat([self] *
+        reps)`` without materialising the intermediate list of segment
+        references, built from whole-column ``np.tile`` ops.
+
+        This is the multi-round fused primitive: a scheduler window of
+        ``reps`` identical rounds replays one round's mega-trace tiled,
+        with ``seg_bounds`` repeated at per-copy offsets so cut sampling
+        still attributes per original segment per round.  Executing the
+        tiling is bit-identical to executing the trace ``reps`` times
+        back-to-back (the session resumability guarantee)."""
+        if reps < 1:
+            raise ValueError("CompiledTrace.tile: reps must be >= 1")
+        if reps == 1:
+            return self
+        n = len(self.codes)
+        offs = np.arange(reps, dtype=np.int64) * n
+        bounds = self.seg_bounds
+        if bounds is None:
+            bounds = np.array([0, n], dtype=np.int64)
+        # tiled bounds: each copy contributes its interior cuts shifted by
+        # its offset; the shared endpoints collapse (copy k's end == copy
+        # k+1's start), giving len = reps * (len(bounds) - 1) + 1
+        tiled_bounds = np.concatenate(
+            [(bounds[:-1][None, :] + offs[:, None]).ravel(),
+             [n * reps]]).astype(np.int64)
+        out = CompiledTrace(
+            codes=np.tile(self.codes, reps),
+            rids=np.tile(self.rids, reps),
+            concs=np.tile(self.concs, reps),
+            hints=np.tile(self.hints, reps),
+            fargs=np.tile(self.fargs, reps),
+            boundaries=(self.boundaries[None, :] + offs[:, None]).ravel(),
+            touch_pos_np=(self.touch_pos_np[None, :]
+                          + offs[:, None]).ravel(),
+            touch_rid_np=np.tile(self.touch_rid_np, reps),
+            n_ops=self.n_ops * reps,
+            seg_bounds=tiled_bounds,
+        ).freeze()
+        # seed the whole-trace span memo from the source's structure:
+        # tiling introduces no new rids, so the unique-rid set and each
+        # rid's first touch ordinal are the source's (first copy), and
+        # repeats make the stream trivially non-unique.  Saves an
+        # O(N log N) `np.unique` over the tiled stream — windows are
+        # executed once, so nothing would amortise it.  The seeds key on
+        # zc_key=None; a zero-copy execution misses them and recomputes.
+        if len(self.boundaries) == 0 and len(out.touch_rid_np):
+            n_out = len(out.codes)
+            out.span_cache[(0, n_out, None)] = [
+                None, None, out.touch_pos_np, out.touch_rid_np,
+                False, _EMPTY_I, _EMPTY_I]
+            u, first_idx = np.unique(self.touch_rid_np, return_index=True)
+            out.span_cache[("uniq", 0, n_out, None)] = (
+                u, u.tolist(), first_idx)
+        return out
+
     def span(self, s: int, e: int, zc_mask=None, zc_key=None):
-        """Touch-stream slice for ops [s, e): (pos_list, rid_list, pos_np,
-        rid_np, rids_unique, zc_pos_np, zc_rid_np).  Touches on zero-copy
-        ranges (``zc_mask`` indexed by rid; ``zc_key`` identifies the
-        zero-copy configuration for caching) are split out of the
-        policy-visible stream.  Cached — compiled traces are executed many
-        times (policy/variant axes of a sweep)."""
+        """Touch-stream slice for ops [s, e): a mutable cache cell
+        ``[pos_list, rid_list, pos_np, rid_np, rids_unique, zc_pos_np,
+        zc_rid_np]``.  Touches on zero-copy ranges (``zc_mask`` indexed by
+        rid; ``zc_key`` identifies the zero-copy configuration for
+        caching) are split out of the policy-visible stream.  Cached —
+        compiled traces are executed many times (policy/variant axes of a
+        sweep).  The Python-list mirrors (slots 0/1) materialise lazily
+        via `span_lists` — only the sequential Phase-A fallbacks read
+        them, and a multi-round window span can hold millions of touches
+        the vectorised paths never iterate."""
         key = (s, e, zc_key)
         cached = self.span_cache.get(key)
         if cached is None:
@@ -252,18 +312,19 @@ class CompiledTrace:
                     keep = ~zsel
                     pos_np = pos_np[keep]
                     rid_np = rid_np[keep]
-                    pos_l = pos_np.tolist()
-                    rid_l = rid_np.tolist()
-                else:
-                    pos_l = self.touch_pos[lo:hi]
-                    rid_l = self.touch_rid[lo:hi]
-            else:
-                pos_l = self.touch_pos[lo:hi]
-                rid_l = self.touch_rid[lo:hi]
             uniq = len(np.unique(rid_np)) == len(rid_np)
-            cached = (pos_l, rid_l, pos_np, rid_np, uniq, zc_pos, zc_rid)
+            cached = [None, None, pos_np, rid_np, uniq, zc_pos, zc_rid]
             self.span_cache[key] = cached
         return cached
+
+    def span_lists(self, s: int, e: int, zc_key=None) -> tuple[list, list]:
+        """The (pos_list, rid_list) mirrors of a cached `span` entry,
+        materialised on first use and memoised in the cache cell."""
+        cached = self.span_cache[(s, e, zc_key)]
+        if cached[0] is None:
+            cached[0] = cached[2].tolist()
+            cached[1] = cached[3].tolist()
+        return cached[0], cached[1]
 
 
 def compile_trace(trace: Iterable, max_ops: int | None = None) -> CompiledTrace:
@@ -611,6 +672,7 @@ class SegmentCache:
         self.misses = 0
         self.relocations = 0
         self.concats = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._segments)
@@ -668,6 +730,7 @@ class SegmentCache:
         self._segments.move_to_end(key)
         while len(self._segments) > self.cache_size:
             self._segments.popitem(last=False)
+            self.evictions += 1
 
     def clear(self) -> None:
         self._segments.clear()
@@ -677,7 +740,8 @@ class SegmentCache:
                 "shared_lookup_hits": self.hits,
                 "shared_lookup_misses": self.misses,
                 "shared_relocations": self.relocations,
-                "shared_concats": self.concats}
+                "shared_concats": self.concats,
+                "shared_evictions": self.evictions}
 
 
 class TraceSession:
@@ -954,9 +1018,22 @@ def _params_tables(size_arr: np.ndarray, params: CostParams,
     }
 
 
+# one-entry identity memo over (space, params, n_ranges): scheduler rounds
+# call `_tables` once per span with the same space and params, so the
+# common case skips the weak-dict probe and the params-keyed dict hashes
+# entirely.  Holds only a weakref to the space (the strong tables live in
+# `_SPACE_TABLES`), so it cannot extend any space's lifetime.
+_TABLES_LAST: tuple | None = None
+
+
 def _tables(space: AddressSpace, params: CostParams) -> dict:
-    tab = _SPACE_TABLES.get(space)
+    global _TABLES_LAST
+    last = _TABLES_LAST
     n = len(space.ranges)
+    if (last is not None and last[0]() is space and last[1] is params
+            and last[2] == n):
+        return last[3]
+    tab = _SPACE_TABLES.get(space)
     if tab is None:
         size_arr = np.array([r.end - r.start for r in space.ranges],
                             dtype=np.int64)
@@ -997,6 +1074,7 @@ def _tables(space: AddressSpace, params: CostParams) -> dict:
             tab["params"][params] = per_params
         merged = {**tab, **per_params}
         tab["merged"][params] = merged
+    _TABLES_LAST = (weakref.ref(space), params, n, merged)
     return merged
 
 
@@ -1273,22 +1351,35 @@ def _span_phase_a(ct: CompiledTrace, mgr, s: int, e: int, zc_mask, zc_key):
     hit/miss/victim structure (mutating residency/policy state) and hand
     back everything Phase B needs.  Returns (tab, struct, zc_pos, zc_rid).
     """
-    tpos, trid, tpos_np, trid_np, uniq, zc_pos, zc_rid = \
+    _, _, tpos_np, trid_np, uniq, zc_pos, zc_rid = \
         ct.span(s, e, zc_mask, zc_key)
     tab = _tables(mgr.space, mgr.params)
     defer_on = bool(mgr.defer_granule) and mgr.defer_k > 0
     pw = mgr.previct_watermark
     struct = None
-    if (type(mgr.policy) is LRF and not mgr.pinned and len(trid)
-            and not defer_on):
-        # vectorised LRF fast paths, gated on a residency bitmap
-        mask = np.zeros(tab["n_ranges"], dtype=bool)
+    if type(mgr.policy) is LRF and len(trid_np) and not defer_on:
+        # vectorised LRF fast paths.  The span's unique-rid structure is
+        # static per (s, e, zc_key), so it memoises in the span cache;
+        # only the residency probe runs per execution.
+        ukey = ("uniq", s, e, zc_key)
+        uc = ct.span_cache.get(ukey)
+        if uc is None:
+            u, first_idx = np.unique(trid_np, return_index=True)
+            uc = (u, u.tolist(), first_idx)
+            ct.span_cache[ukey] = uc
+        u, u_list, first_idx = uc
         resident = mgr.resident
-        if resident:
-            mask[np.fromiter(resident, dtype=np.int64,
-                             count=len(resident))] = True
-        u, first_idx = np.unique(trid_np, return_index=True)
-        miss_u = ~mask[u]
+        mask = None
+        if len(u_list) > 256:
+            # wide spans: a residency bitmap beats per-rid set probes
+            mask = np.zeros(tab["n_ranges"], dtype=bool)
+            if resident:
+                mask[np.fromiter(resident, dtype=np.int64,
+                                 count=len(resident))] = True
+            miss_u = ~mask[u]
+        else:
+            miss_u = np.fromiter((r not in resident for r in u_list),
+                                 dtype=bool, count=len(u_list))
         need = int(tab["size_arr"][u[miss_u]].sum())
         if need <= mgr.free and (
                 pw <= 0.0 or need == 0
@@ -1297,10 +1388,19 @@ def _span_phase_a(ct: CompiledTrace, mgr, s: int, e: int, zc_mask, zc_key):
             # free stays above the watermark at every prefix (free only
             # shrinks, monotonically, to its final value), so no previcts
             # fire either: misses are exactly the first touches of the
-            # non-resident ranges, hits are LRF no-ops
+            # non-resident ranges, hits are LRF no-ops.  Sound with pinned
+            # ranges too: pinned ⊆ resident (pin migrates first; every
+            # eviction path picks victims from the policy queue, which
+            # excludes pinned), so no miss rid is ever pinned and the
+            # queue inserts match `_phase_a_lrf` exactly.
             struct = _phase_a_lrf_noevict(
                 mgr, tpos_np, trid_np, first_idx[miss_u], need)
-        elif pw <= 0.0:
+        elif pw <= 0.0 and not mgr.pinned:
+            if mask is None:
+                mask = np.zeros(tab["n_ranges"], dtype=bool)
+                if resident:
+                    mask[np.fromiter(resident, dtype=np.int64,
+                                     count=len(resident))] = True
             # eviction-pressure span: solve the FIFO dynamics in closed
             # form under the every-touch-misses hypothesis and validate it
             # vectorised (holds for linear streaming AND full thrash);
@@ -1315,21 +1415,32 @@ def _span_phase_a(ct: CompiledTrace, mgr, s: int, e: int, zc_mask, zc_key):
                     same = srid[1:] == srid[:-1]
                     prev[order[1:][same]] = order[:-1][same]
                     ct.span_cache[("prev", s, e, zc_key)] = prev
-            struct = _phase_a_lrf_streaming(mgr, tpos_np, trid, trid_np,
-                                            tab, mask, prev)
+            struct = _phase_a_lrf_streaming(
+                mgr, tpos_np, ct.span_lists(s, e, zc_key)[1], trid_np,
+                tab, mask, prev)
+        elif pw <= 0.0:
+            # pinned span under eviction pressure: sorted-array sweep
+            # over the miss stream (closed-form FIFO eviction counts via
+            # cumsum + searchsorted); returns None — falling through to
+            # the sequential heap walk — when a victim re-touch or
+            # this-span eviction demand breaks its preconditions
+            struct = _phase_a_lrf_sweep(
+                mgr, tpos_np, u, first_idx, miss_u, tab)
     if struct is None:
         # the sequential passes mutate live state as they go; snapshot so
         # a mid-span device-full error can be replayed through the scalar
         # path, which raises with fully consistent partial manager state
+        tpos, trid = ct.span_lists(s, e, zc_key)
         snap = _snapshot(mgr)
         try:
             if defer_on or pw > 0.0:
                 struct = _phase_a_var(mgr, tpos, trid, tab)
             elif type(mgr.policy) is LRF:
                 if mgr.pinned:
-                    # pinned ranges disable the bitmap fast paths above;
-                    # the heap variant skips hit runs instead of walking
-                    # every touch (scheduler spans are hit-dominated)
+                    # pinned span under eviction pressure (the no-evict
+                    # fast path above handles the hit-dominated steady
+                    # state); the heap variant skips hit runs instead of
+                    # walking every touch
                     struct = _phase_a_lrf_runs(ct, mgr, s, e, zc_key,
                                                tpos_np, trid_np, tab)
                 else:
@@ -1515,6 +1626,69 @@ def _phase_a_lrf(mgr, tpos, trid, tab):
     mgr.free = free
     nev = np.diff(np.array(vends, dtype=np.int64), prepend=0)
     return SpanStruct(miss_pos, miss_rid, nev, victims)
+
+
+def _phase_a_lrf_sweep(mgr, tpos_np, u, first_idx, miss_u, tab):
+    """Sorted-array Phase A for pinned LRF spans under eviction pressure.
+
+    When no evicted victim is touched anywhere in the span, the miss
+    stream is exactly the first touches of the non-resident rids in
+    ordinal order, and the victim stream is a prefix of the policy
+    queue's FIFO order — so the per-miss eviction counts solve in closed
+    form: with ``D[j]`` the cumulative miss bytes beyond the initial
+    free pool and ``Vcum`` the queue's cumulative victim sizes, miss
+    ``j`` needs the smallest ``k`` with ``Vcum[k-1] >= D[j]`` victims
+    (`searchsorted`), which reproduces the scalar ``while free < nbytes``
+    loop integer-exactly.  Sound with pinned ranges for the same reason
+    as the no-evict path: pinned ⊆ resident, so no miss rid is pinned
+    and every queue insert matches `_phase_a_lrf`.
+
+    Returns None — callers fall through to the heap walk — when the
+    span's own eviction demand reaches past the initial queue (a rid
+    missed in-span would become a victim) or any victim has an in-span
+    touch (its eviction would turn a later hit into a miss).
+    """
+    size_arr = tab["size_arr"]
+    fi = first_idx[miss_u]
+    order = np.argsort(fi)
+    fi = fi[order]
+    mrid = u[miss_u][order]
+    if not len(mrid):
+        return SpanStruct([], [], _EMPTY_I, [])
+    D = np.cumsum(size_arr[mrid]) - mgr.free
+    q = mgr.policy._q
+    L = len(q)
+    if int(D[-1]) > 0:
+        if L == 0:
+            return None                      # device full: heap path raises
+        vq = np.fromiter(q.keys(), dtype=np.int64, count=L)
+        Vcum = np.cumsum(size_arr[vq])
+        kl = int(np.searchsorted(Vcum, D[-1], side="left")) + 1
+        if kl > L:
+            return None                      # demand reaches this span's misses
+        # victim re-touch check: u is sorted, so one searchsorted probe
+        vk = vq[:kl]
+        hit = np.searchsorted(u, vk)
+        if np.any((hit < len(u)) & (u[np.minimum(hit, len(u) - 1)] == vk)):
+            return None
+        K = np.where(D > 0, np.searchsorted(Vcum, D, side="left") + 1, 0)
+        victims = vk.tolist()
+        freed = int(Vcum[kl - 1])
+    else:
+        K = np.zeros(len(mrid), dtype=np.int64)
+        victims = []
+        freed = 0
+    resident = mgr.resident
+    for v in victims:
+        del q[v]
+    resident.difference_update(victims)
+    mlist = mrid.tolist()
+    resident.update(mlist)
+    for rid in mlist:
+        q[rid] = 0.0
+    mgr.free = freed - int(D[-1])
+    nev = np.diff(K, prepend=0)
+    return SpanStruct(tpos_np[fi].tolist(), mlist, nev, victims)
 
 
 def _phase_a_lrf_runs(ct, mgr, s, e, zc_key, tpos_np, trid_np, tab):
@@ -1830,6 +2004,40 @@ def _nev_from_pairs(vend_pairs, n_miss):
 
 # ----------------------------------------------------- phase B — accounting
 
+def _fold_evictions(acc, m_nev, starts, ec_v) -> None:
+    """Fold each miss's blocking-eviction costs into its ``acc`` entry,
+    preserving the scalar path's per-eviction left-to-right add order.
+
+    Sweeps the eviction *ordinal* (all first evictions, then all
+    seconds, ...) so each accumulator sees the same add chain as the
+    scalar `+=` loop, vectorised across misses — one pass total for the
+    dominant single-eviction case.  When only a few deep eviction chains
+    remain (a capacity shrink blocking one miss on many victims), each
+    survivor finishes with one exact sequential ``np.cumsum`` fold seeded
+    from its current value instead of one vector pass per remaining
+    ordinal — bit-identical, O(chains) numpy calls instead of
+    O(max depth)."""
+    if not len(ec_v):
+        return
+    sel = np.nonzero(m_nev > 0)[0]
+    nmax = int(m_nev.max())
+    j = 0
+    while j < nmax:
+        if j:
+            sel = sel[m_nev[sel] > j]
+            if not len(sel):
+                return
+            if len(sel) * 8 <= nmax - j:
+                for i in sel.tolist():
+                    st = int(starts[i]) + j
+                    en = st + int(m_nev[i]) - j
+                    acc[i] = np.cumsum(
+                        np.concatenate(([acc[i]], ec_v[st:en])))[-1]
+                return
+        acc[sel] += ec_v[starts[sel] + j]
+        j += 1
+
+
 def _phase_b(ct, mgr, s, e, tab, st: SpanStruct, zc_pos, zc_rid,
              zc_key=None) -> np.ndarray:
     """Float accounting for one span.  Returns the per-op wall trajectory
@@ -1878,20 +2086,12 @@ def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
     t1, t2, t3, t4, t5 = terms.T
     ec_v = tab["ecs"][sizeidx[v_rid]] if len(v_rid) else np.zeros(0)
 
-    # fold eviction costs into each migration's alloc term, preserving the
-    # scalar path's per-eviction add order: iterate over the eviction
-    # ordinal (all first evictions, then all seconds, ...) so each miss's
-    # accumulator sees the same left-to-right add chain, vectorised across
-    # misses instead of a Python double loop
+    # fold eviction costs into each migration's alloc term in the scalar
+    # path's per-eviction add order (`_fold_evictions`)
     alloc = t3.copy()
     ends = np.cumsum(m_nev)
     starts = ends - m_nev
-    if len(ec_v):
-        sel = np.nonzero(m_nev > 0)[0]
-        for j in range(int(m_nev.max())):
-            if j:
-                sel = sel[m_nev[sel] > j]
-            alloc[sel] += ec_v[starts[sel] + j]
+    _fold_evictions(alloc, m_nev, starts, ec_v)
     total = (((t1 + t2) + alloc) + t4) + t5
 
     if mgr.parallel_evict:
@@ -1899,12 +2099,7 @@ def _phase_b_fast(ct, mgr, s, e, tab, miss_pos, miss_rid, nev, victims,
         # migration (plus lock/rollback overhead)
         base = (((t1 + t2) + t3) + t4) + t5
         evw = np.zeros(M)
-        if len(ec_v):
-            sel = np.nonzero(m_nev > 0)[0]
-            for j in range(int(m_nev.max())):
-                if j:
-                    sel = sel[m_nev[sel] > j]
-                evw[sel] += ec_v[starts[sel] + j]
+        _fold_evictions(evw, m_nev, starts, ec_v)
         total = np.where(m_nev > 0, np.maximum(base, evw) + 5e-6, base)
 
     # wall trajectory over the whole span (compute ops interleave misses;
@@ -2046,23 +2241,13 @@ def _phase_b_general(ct, mgr, s, e, tab, st: SpanStruct,
         alloc = t3.copy()
         ends = np.cumsum(m_nev)
         starts = ends - m_nev
-        if len(ec_v):
-            sel = np.nonzero(m_nev > 0)[0]
-            for j in range(int(m_nev.max())):
-                if j:
-                    sel = sel[m_nev[sel] > j]
-                alloc[sel] += ec_v[starts[sel] + j]
+        _fold_evictions(alloc, m_nev, starts, ec_v)
         total = (((t1 + t2) + alloc) + t4) + t5
 
         if mgr.parallel_evict:
             base = (((t1 + t2) + t3) + t4) + t5
             evw = np.zeros(M)
-            if len(ec_v):
-                sel = np.nonzero(m_nev > 0)[0]
-                for j in range(int(m_nev.max())):
-                    if j:
-                        sel = sel[m_nev[sel] > j]
-                    evw[sel] += ec_v[starts[sel] + j]
+            _fold_evictions(evw, m_nev, starts, ec_v)
             total = np.where(m_nev > 0, np.maximum(base, evw) + 5e-6, base)
         deltas[m_rel] = total
 

@@ -262,6 +262,10 @@ def run_sweep(
             per_unit = max(1, -(-len(pending) // n_jobs))
             units = [g[k:k + per_unit] for g in grouped
                      for k in range(0, len(g), per_unit)]
+            # longest-unit-first dispatch: pool.map hands units out in
+            # order, so a big group scheduled last would serialise the
+            # tail of the sweep behind one worker
+            units.sort(key=len, reverse=True)
             pool = None
             try:
                 pool = ProcessPoolExecutor(

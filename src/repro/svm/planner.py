@@ -81,6 +81,47 @@ class ParamRanges:
         """A fresh `SVMManager` over this plan's address space."""
         return SVMManager(self.space, policy=policy, params=params, **kw)
 
+    def clone_into(self, space: AddressSpace) -> "ParamRanges":
+        """A congruent copy of this plan at ``space``'s current cursor.
+
+        The shared-pool fast path for repeated architectures: this plan's
+        allocations and ranges replicate under constant address / rid /
+        alloc-id shifts (both plans start on an alignment boundary of the
+        same space, so every alignment cut lands at the same relative
+        offset), skipping the per-leaf ``alloc``/`split_allocation` walk.
+        Requires ``self`` to have been planned into the same ``space``
+        with ``align_start=True`` — exactly how `PoolScheduler` plans
+        tenants.  Congruence (`geometry()` equality) holds by
+        construction."""
+        from repro.core.ranges import Allocation, Range
+
+        space.pad_to_alignment()
+        n_r = sum(len(rids) for rids in self.leaf_ranges.values())
+        proto_ranges = space.ranges[self.rid_base:self.rid_base + n_r]
+        aid0 = proto_ranges[0].alloc_id
+        d_addr = space._cursor - proto_ranges[0].start
+        d_rid = len(space.ranges) - self.rid_base
+        d_aid = len(space.allocations) - aid0
+        new_ranges = [Range(rid=r.rid + d_rid, alloc_id=r.alloc_id + d_aid,
+                            start=r.start + d_addr, end=r.end + d_addr)
+                      for r in proto_ranges]
+        space.ranges.extend(new_ranges)
+        for a in space.allocations[aid0:aid0 + len(self.leaf_bytes)]:
+            space.allocations.append(Allocation(
+                alloc_id=a.alloc_id + d_aid, name=a.name,
+                start=a.start + d_addr, size=a.size))
+            space._ranges_by_alloc[a.alloc_id + d_aid] = [
+                new_ranges[r.rid - self.rid_base]
+                for r in space._ranges_by_alloc[a.alloc_id]]
+            space._cursor += a.size
+        return ParamRanges(
+            space=space,
+            leaf_ranges={path: [rid + d_rid for rid in rids]
+                         for path, rids in self.leaf_ranges.items()},
+            leaf_bytes=dict(self.leaf_bytes),
+            hbm_budget=self.hbm_budget,
+            rid_base=self.rid_base + d_rid)
+
 
 def plan_leaf_ranges(leaves: Sequence[tuple[str, int]], hbm_budget: int,
                      base: int = DEFAULT_BASE, *,

@@ -162,10 +162,14 @@ class ModelSpec:
                    flops_per_layer=tuple(flops))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One decode stream: its spec, arrival time, decode length, and —
-    once admitted — its plan/session plus attributed accounting."""
+    once admitted — its plan/session plus attributed accounting.
+
+    ``eq=False``: requests are unique mutable objects; identity equality
+    keeps ``active.remove(req)`` a pointer scan instead of a full
+    field-by-field compare against every co-active request."""
 
     req_id: int
     spec: ModelSpec
@@ -279,6 +283,7 @@ class PoolScheduler:
                  scalar: bool = False, fused: bool = True,
                  base: int = DEFAULT_BASE,
                  segment_cache_size: int = 512,
+                 concat_memo_size: int = 16,
                  fault_plan: FaultPlan | None = None,
                  retry_policy: RetryPolicy | None = None,
                  thrash_watermark: float | None = None,
@@ -311,11 +316,17 @@ class PoolScheduler:
         self.pinned_bytes_total = 0
         self._admit_seq = 0
         self._geometry: dict[ModelSpec, tuple] = {}
+        self._plan_proto: dict[ModelSpec, ParamRanges] = {}
         self._sessions: list[TraceSession] = []
         # round-shape memo: identical segment tuples (by identity — the
         # per-session LRUs hand back the same relocated objects every
-        # steady-state round) reuse one concatenated mega-trace
+        # steady-state round) reuse one concatenated mega-trace.  Bounded
+        # (LRU) so thousand-round schedules with churning round shapes
+        # cannot grow host memory without limit; evictions are counted
+        # and surfaced in the result's ``shared_cache`` block.
         self._concat_memo: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._concat_memo_size = max(int(concat_memo_size), 1)
+        self._concat_evictions = 0
 
         # ---- chaos layer + runtime guards (docs/robustness.md)
         self.injector = (FaultInjector(fault_plan)
@@ -369,14 +380,23 @@ class PoolScheduler:
 
     def _admit_one(self, req: Request, active: list[Request]) -> None:
         if req.plan is None:
-            req.plan = plan_leaf_ranges(req.spec.leaves, self.capacity,
-                                        space=self.space, align_start=True)
-            geo = req.plan.geometry()
-            proto = self._geometry.setdefault(req.spec, geo)
-            if geo != proto:  # pragma: no cover — congruence is by design
-                raise AssertionError(
-                    f"req {req.req_id}: plan geometry diverged from its "
-                    f"spec's prototype; segment sharing would be unsound")
+            proto_plan = self._plan_proto.get(req.spec)
+            if proto_plan is not None:
+                # repeated architecture: congruent clone of the
+                # prototype plan (geometry equality by construction)
+                req.plan = proto_plan.clone_into(self.space)
+            else:
+                req.plan = plan_leaf_ranges(
+                    req.spec.leaves, self.capacity, space=self.space,
+                    align_start=True)
+                geo = req.plan.geometry()
+                proto = self._geometry.setdefault(req.spec, geo)
+                if geo != proto:  # pragma: no cover — congruent by design
+                    raise AssertionError(
+                        f"req {req.req_id}: plan geometry diverged from "
+                        f"its spec's prototype; segment sharing would be "
+                        f"unsound")
+                self._plan_proto[req.spec] = req.plan
             req.session = TraceSession(
                 self.mgr, scalar=self.scalar, cache_size=8,
                 shared_cache=self.shared_cache, rid_base=req.plan.rid_base)
@@ -407,15 +427,25 @@ class PoolScheduler:
         if self.pinned_bytes_total + nbytes > self.pin_frac * self.capacity:
             return
         rids = tuple(req.plan.leaf_ranges[path])
-        self._replay_attributed(req, lambda: self._flush_pins(req, rids))
+        self._replay_attributed(
+            req, lambda: self._run_pin_segment(req, "pin", rids))
         req.pinned_rids = rids
         req.pinned_bytes = nbytes
         self.pinned_bytes_total += nbytes
 
-    def _flush_pins(self, req: Request, rids: tuple[int, ...]) -> None:
-        for rid in rids:
-            req.session.pin(rid)
-        req.session.flush()
+    def _run_pin_segment(self, req: Request, kind: str,
+                         rids: tuple[int, ...]) -> None:
+        """Replay the request's (un)pin segment via the keyed segment
+        path: every same-architecture request records the congruent rid
+        block, so after the first admission the segment comes out of the
+        shared cache as a pure rid-shift relocation instead of a
+        per-request record + seal."""
+        op = TraceSession.pin if kind == "pin" else TraceSession.unpin
+
+        def record(s: TraceSession) -> None:
+            for rid in rids:
+                op(s, rid)
+        req.session.run((kind, req.spec), record)
 
     # -------------------------------------------------------- decode loop
 
@@ -730,8 +760,9 @@ class PoolScheduler:
             return ent[1]
         mega = self.shared_cache.concat(segs)
         self._concat_memo[key] = (tuple(segs), mega)
-        while len(self._concat_memo) > 16:
+        while len(self._concat_memo) > self._concat_memo_size:
             self._concat_memo.popitem(last=False)
+            self._concat_evictions += 1
         return mega
 
     def _run_round_fused(self, order: list[Request], waiting,
@@ -773,6 +804,126 @@ class PoolScheduler:
             self._run_block_fused(block, queued, active, done, ingest)
             i = j
 
+    # ------------------------------------------- vectorized window tier
+
+    def _window_rounds(self, order: list[Request], waiting,
+                       queued: "deque[Request]") -> int:
+        """How many *whole rounds* beyond this one can fuse into a single
+        multi-round window pass — the count ``r`` such that rounds
+        1..r are provably identical replays of the same segment tuple
+        with every between-token bookkeeping step a no-op:
+
+          * no pending arrival can ingest mid-window (``waiting`` empty),
+          * the admission queue cannot move: empty, or (non-fifo) its
+            head fails the working-set watermark check — admitted bytes
+            and pool capacity are both constant inside a window, so the
+            check's outcome is constant too (fifo admits on the backoff
+            gate alone, which expiring mid-window would flip),
+          * the thrash guard is off (it samples eviction counters at
+            every round boundary and may preempt),
+          * no member finishes inside the window (a retirement unpins
+            and re-admits — the finisher round runs on the block tier),
+          * no chaos event falls due inside the window (the injector
+            keys off the token counter; the window decodes
+            ``r × len(order)`` tokens).
+
+        Returns 0 when no multi-round window applies (callers then run
+        the normal one-round block tier)."""
+        if waiting or self.thrash_watermark is not None:
+            return 0
+        if queued and (self.policy == "fifo"
+                       or self._fits(queued[0].spec)):
+            return 0
+        r = min(q.n_tokens - q.tokens_done for q in order) - 1
+        if r < 2:
+            return 0
+        if self.injector is not None:
+            nxt = self.injector.next_at()
+            if math.isfinite(nxt):
+                # every round i in the window must satisfy the per-round
+                # fused gate: next_at > tokens_total + (i+1)*K
+                r = min(r, int(nxt - self._tokens_total - 1)
+                        // len(order))
+        return r if r >= 2 else 0
+
+    def _run_window_fused(self, order: list[Request], r: int,
+                          queued: "deque[Request]", active: list[Request],
+                          done: list[Request], ingest) -> None:
+        """Replay ``r`` identical scheduler rounds in **one**
+        `execute_fused` pass over the round mega-trace tiled ``r`` times,
+        with all per-request bookkeeping done as NumPy column operations
+        over the (round × request) cut table.
+
+        Byte-identity with the per-token oracle: the tiled trace executes
+        bit-identically to ``r`` back-to-back mega replays (the engine's
+        resumability contract), the wall/`now` trajectories are exact
+        seeded ``np.cumsum`` folds in the oracle's add order (column-wise
+        per request, flat for the shared clock), and the integer counters
+        attribute through exact cut-row differences.  Session counters
+        bump by the closed forms of what the per-round loop would do:
+        round 1's fetch runs for real, rounds 2..r are per-session LRU
+        hits."""
+        segs = self._fetch_segments(order)
+        if len(segs) == 1:
+            mega = segs[0]
+            cuts1 = np.array([len(mega)], dtype=np.int64)
+        else:
+            mega = self._concat_round(segs)
+            cuts1 = mega.seg_bounds[1:]
+        if self._fused_diverged(segs, mega, cuts1):
+            # same degradation as the block tier's round 1: golden
+            # per-token fallback, then let the outer loop re-evaluate
+            self._fused_fallback(order, len(segs), queued, active, done,
+                                 ingest)
+            return
+        K = len(order)
+        window = mega.tile(r)
+        cuts = window.seg_bounds[1:]
+        m = self.mgr
+        prev_w = m.wall
+        prev_c = np.array([m.n_migrations, m.n_evictions,
+                           m.bytes_migrated, m.bytes_evicted],
+                          dtype=np.int64)
+        snaps = execute_fused(window, m, cuts)
+        live = np.array([m.wall, float(m.n_migrations),
+                         float(m.n_evictions), float(m.bytes_migrated),
+                         float(m.bytes_evicted)])
+        if not np.array_equal(snaps[-1], live):
+            # post-hoc reconciliation guard, as in the block tier
+            self.incidents.append(
+                f"tok={self._tokens_total} fused reconciliation: final "
+                f"cut row != live counters — residual charged to "
+                f"req={order[-1].req_id}")
+            snaps = snaps.copy()
+            snaps[-1] = live
+        # request-table attribution: column k of the (r, K) delta matrix
+        # is request k's per-round charge stream
+        walls = snaps[:, 0]
+        dws = np.diff(walls, prepend=prev_w)
+        now_traj = np.cumsum(np.concatenate(([self.now], dws)))
+        seeds = np.array([q.svm_wall_s for q in order])
+        wall_fin = np.cumsum(
+            np.vstack((seeds, dws.reshape(r, K))), axis=0)[-1]
+        cdiff = np.diff(snaps[:, 1:].astype(np.int64), axis=0,
+                        prepend=prev_c[None, :])
+        csum = cdiff.reshape(r, K, 4).sum(axis=0)
+        first_tok = now_traj[1:K + 1]
+        for k, req in enumerate(order):
+            req.svm_wall_s = float(wall_fin[k])
+            req.migrations += int(csum[k, 0])
+            req.evictions += int(csum[k, 1])
+            req.bytes_migrated += int(csum[k, 2])
+            req.bytes_evicted += int(csum[k, 3])
+            sess = req.session
+            sess.cache_hits += r - 1
+            sess.segments_replayed += r
+            sess.ops_replayed += r * len(segs[k])
+            if req.tokens_done == 0:
+                req.first_token_s = float(first_tok[k])
+            req.tokens_done += r
+        self._tokens_total += r * K
+        self.now = float(now_traj[-1])
+
     def _fused_fallback(self, block: list[Request], n_segs: int,
                         queued: "deque[Request]", active: list[Request],
                         done: list[Request], ingest) -> None:
@@ -797,6 +948,8 @@ class PoolScheduler:
         last cut must cover the whole mega-trace."""
         if len(cuts) != len(segs):
             return True
+        if len(segs) == 1:
+            return int(cuts[0]) != len(segs[0]) or len(mega) != len(segs[0])
         bounds = np.concatenate(
             [np.zeros(1, dtype=np.int64), np.asarray(cuts, np.int64)])
         expected = np.asarray([len(s) for s in segs], dtype=np.int64)
@@ -843,8 +996,15 @@ class PoolScheduler:
                 f"req={block[-1].req_id}")
             snaps = snaps.copy()
             snaps[-1] = live
-        walls = snaps[:, 0].tolist()
-        counts = snaps[:, 1:].astype(np.int64).tolist()
+        if len(block) == 1:
+            # unit block (finisher/admission rounds): scalar attribution
+            # without the array round-trips
+            walls = [float(snaps[0, 0])]
+            counts = [[int(snaps[0, 1]), int(snaps[0, 2]),
+                       int(snaps[0, 3]), int(snaps[0, 4])]]
+        else:
+            walls = snaps[:, 0].tolist()
+            counts = snaps[:, 1:].astype(np.int64).tolist()
         for k, req in enumerate(block):
             w, c = walls[k], counts[k]
             dw = w - prev_w
@@ -872,11 +1032,9 @@ class PoolScheduler:
         if req.pinned_rids:
             # release app-directed placement; the ranges rejoin the
             # eviction policy and age out under other tenants' pressure
-            def unpin():
-                for rid in req.pinned_rids:
-                    req.session.unpin(rid)
-                req.session.flush()
-            self._replay_attributed(req, unpin)
+            self._replay_attributed(
+                req, lambda: self._run_pin_segment(req, "unpin",
+                                                   req.pinned_rids))
             self.pinned_bytes_total -= req.pinned_bytes
         req.finish_s = self.now
         self.admitted_bytes -= req.spec.total_bytes
@@ -964,8 +1122,13 @@ class PoolScheduler:
                 continue
             order = self._round_order(active)
             if self.fused and not self._chaos_round_pending(order):
-                self._run_round_fused(order, waiting, queued, active,
-                                      done, ingest)
+                r = self._window_rounds(order, waiting, queued)
+                if r:
+                    self._run_window_fused(order, r, queued, active,
+                                           done, ingest)
+                else:
+                    self._run_round_fused(order, waiting, queued, active,
+                                          done, ingest)
                 continue
             if self.fused:
                 # hazard live/due: degrade this round to per-token
@@ -1026,7 +1189,10 @@ class PoolScheduler:
             "segment_local_hits": seg_local_hits,
             "segment_shared_hits": seg_shared_hits,
             "segment_misses": seg_misses,
-            "shared_cache": self.shared_cache.stats(),
+            "shared_cache": {**self.shared_cache.stats(),
+                             "concat_memo_entries": len(self._concat_memo),
+                             "concat_memo_evictions":
+                                 self._concat_evictions},
             "requests": [r.row() for r in done],
             "n_failed": len(failed),
             "failed_requests": [r.row() for r in failed],

@@ -400,6 +400,69 @@ def outer(jobs):
     assert findings == []
 
 
+# --------------------------------------------------------------- hot-loop
+
+ENGINE = "src/repro/core/engine.py"
+
+
+def test_hot_loop_over_column_flagged():
+    findings = lint_source("""
+def execute_all(ct, mgr):
+    for rid in ct.trid_np:
+        mgr_touch(rid)
+""", ENGINE, rules=["hot-loop"])
+    assert rules_of(findings) == ["hot-loop"]
+    assert "trid_np" in findings[0].message
+
+
+def test_hot_loop_enumerate_zip_tolist_forms_flagged():
+    findings = lint_source("""
+def _fold_charges(acc, tpos_np, trid_np, fargs):
+    for i, rid in enumerate(trid_np):
+        acc[rid] += 1
+    for p, f in zip(tpos_np, fargs.tolist()):
+        acc[p] += f
+""", ENGINE, rules=["hot-loop"])
+    assert rules_of(findings) == ["hot-loop", "hot-loop"]
+
+
+def test_hot_loop_outside_execute_fold_functions_passes():
+    # sequential reference oracles iterate columns by design
+    assert lint_source("""
+def _phase_a_lrf(mgr, tpos, trid, tab):
+    for i, rid in enumerate(trid):
+        mgr_probe(rid)
+""", ENGINE, rules=["hot-loop"]) == []
+
+
+def test_hot_loop_range_and_non_column_iters_pass():
+    # index loops over miss/victim selections are O(misses), not O(ops)
+    assert lint_source("""
+def _fold_evictions(acc, m_nev, starts, ec_v):
+    for j in range(int(m_nev.max())):
+        acc += ec_v[starts + j]
+    sel = np.nonzero(m_nev)[0]
+    for i in sel.tolist():
+        acc[i] += 1
+""", ENGINE, rules=["hot-loop"]) == []
+
+
+def test_hot_loop_outside_engine_passes():
+    assert lint_source("""
+def execute_all(ct, mgr):
+    for rid in ct.trid_np:
+        mgr_touch(rid)
+""", CORE, rules=["hot-loop"]) == []
+
+
+def test_hot_loop_suppressible_with_reason():
+    assert lint_source("""
+def execute_cold(ct, mgr):
+    for rid in ct.trid_np:  # svmlint: disable=hot-loop -- cold error path
+        mgr_touch(rid)
+""", ENGINE, rules=["hot-loop"]) == []
+
+
 # ------------------------------------------------------------ suppressions
 
 def test_suppression_with_reason_silences():
