@@ -1,9 +1,15 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test lint bench bench-smoke bench-engine bench-gates chaos-smoke bench-scale docs-check
+.PHONY: test coverage lint bench bench-smoke bench-engine bench-gates chaos-smoke bench-scale docs-check
 
 test:
 	$(PY) -m pytest -x -q
+
+# tier-1 under pytest-cov with the committed line-coverage floor over the
+# engine packages (requires requirements-dev.txt; CI runs this form)
+coverage:
+	$(PY) -m pytest -x -q --cov=repro.core --cov=repro.svm \
+		--cov-report=term --cov-report=xml --cov-fail-under=70
 
 # fail on any svmlint contract finding over src/repro (docs/contracts.md)
 lint:

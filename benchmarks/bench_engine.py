@@ -361,6 +361,79 @@ def bench_scheduler(*, tokens: int = 12) -> dict:
     }
 
 
+def bench_scheduler_measured(*, tokens: int = 12) -> dict:
+    """Measured-admission row (docs/prefetching.md): an oversubscribed
+    8-request mix of a dense architecture and a sparse MoE-style
+    architecture whose *plan* is pool-oversized (208 %) but whose
+    *measured* working set (the routed experts plus dense trunk — what
+    the touch columns prove is resident) is small.  Plan-bytes admission
+    serialises the pool behind the MoE tenant's allocation; measured
+    admission (`PoolScheduler(admit_by="measured")`) charges each tenant
+    its estimated resident bytes, so the same watermark co-admits
+    strictly more tenants.  The gated ratio — peak concurrently active
+    tenants, measured / bytes — is conditioned on evictions per decoded
+    token staying no worse than the plan-bytes run: admitting more
+    tenants by thrashing harder would be cheating.  Fully deterministic
+    under the fixed seed; a determinism recheck rides along."""
+    from repro.core import MB
+    from repro.svm import ModelSpec, run_schedule
+
+    # dense archA fits the pool outright; moeB plans 208 % of the pool
+    # (8 experts per layer) but routes to one expert, touching ~40 %
+    specs = [ModelSpec.synthetic("archA", 8, 3 * MB, embed_bytes=6 * MB),
+             ModelSpec.synthetic_moe("moeB", 12, 1 * MB, n_experts=8,
+                                     expert_bytes=2 * MB,
+                                     active_experts=1,
+                                     embed_bytes=4 * MB)]
+    cap = 100 * MB
+
+    def one(admit_by):
+        t0 = time.perf_counter()
+        r = run_schedule(specs, 8, cap, policy="svm_aware", seed=7,
+                         tokens=tokens, spec_choice="roundrobin",
+                         pin_frac=0.4, admit_by=admit_by)
+        host_s = time.perf_counter() - t0
+        return r, host_s
+
+    rows = {}
+    for admit_by in ("bytes", "measured"):
+        r, host_s = one(admit_by)
+        rows[admit_by] = {
+            "admit_by": admit_by,
+            "peak_active_requests": r["peak_active_requests"],
+            "sim_wall_s": r["makespan_s"],
+            "agg_tok_s": r["agg_tok_s"],
+            "latency_p99_s": r["latency_p99_s"],
+            "evictions": r["evictions"],
+            "evictions_per_token": r["evictions_per_token"],
+            "dos_offered": r["dos_offered"],
+            "dos_peak": r["dos_peak"],
+            "profile_cache": r["profile_cache"],
+            "host_wall_s": host_s,
+        }
+    redo, _ = one("measured")
+    assert redo["evictions"] == rows["measured"]["evictions"] and \
+        redo["makespan_s"] == rows["measured"]["sim_wall_s"], \
+        "measured admission: same seed produced a different run"
+
+    by, me = rows["bytes"], rows["measured"]
+    admit_ratio = (me["peak_active_requests"]
+                   / max(by["peak_active_requests"], 1))
+    # the ratio only counts if the extra tenants do not thrash: measured
+    # ev/token must stay within 5 % of the plan-bytes run's
+    ev_ok = (me["evictions_per_token"]
+             <= by["evictions_per_token"] * 1.05 + 1e-9)
+    return {
+        "label": "serve_sched_measured_admission",
+        "requests": 8,
+        "tokens": tokens,
+        "admit_modes": rows,
+        "admit_ratio": admit_ratio,
+        "ev_tok_ok": ev_ok,
+        "deterministic": True,
+    }
+
+
 def bench_scheduler_fused(*, requests: int = 512,
                           tokens: int = 35) -> dict:
     """Scheduler-scale fused-round row: ≥512 burst-arrival requests (two
@@ -602,8 +675,8 @@ def main() -> None:
 
     out = {"traces": [], "compile": [], "variants": [], "sweep": None,
            "trace_cache": None, "serving": None, "scheduler": None,
-           "scheduler_fused": None, "scheduler_chaos": None,
-           "scheduler_scale": None}
+           "scheduler_measured": None, "scheduler_fused": None,
+           "scheduler_chaos": None, "scheduler_scale": None}
     for name, dos, align in traces:
         row = bench_trace(name, dos, align, reps)
         out["traces"].append(row)
@@ -665,6 +738,18 @@ def main() -> None:
           f"{sc['policies']['svm_aware']['evictions_per_token']:.2f} "
           f"(reduction {sc['evict_reduction']:.2f}x, "
           f"sim wall {sc['sim_wall_ratio']:.2f}x)", flush=True)
+
+    out["scheduler_measured"] = bench_scheduler_measured(
+        tokens=8 if args.smoke else 12)
+    sm = out["scheduler_measured"]
+    print(f"scheduler {sm['label']}: bytes admits "
+          f"{sm['admit_modes']['bytes']['peak_active_requests']} peak / "
+          f"{sm['admit_modes']['bytes']['evictions_per_token']:.2f} "
+          f"ev/tok, measured "
+          f"{sm['admit_modes']['measured']['peak_active_requests']} peak "
+          f"/ {sm['admit_modes']['measured']['evictions_per_token']:.2f} "
+          f"ev/tok (ratio {sm['admit_ratio']:.2f}x, "
+          f"ev_ok={sm['ev_tok_ok']})", flush=True)
 
     # the fused-round config is the gate config even under --smoke: the
     # fused tier only engages at scale, so a scaled-down smoke row would
@@ -764,6 +849,16 @@ def main() -> None:
     out["gate_sched_evict_reduction"] = scgate
     out["gate_sched_met"] = scgate >= 1.5
 
+    # measured-admission gate: capping admitted *measured* bytes instead
+    # of plan bytes must co-admit >= 1.2x the tenants of the plan-bytes
+    # run at evictions/token no worse than it (within 5 %) — the ratio
+    # is zeroed if the thrash condition fails, so a regression in either
+    # half trips the gate.  Deterministic simulation, no retry.
+    mgate = (out["scheduler_measured"]["admit_ratio"]
+             if out["scheduler_measured"]["ev_tok_ok"] else 0.0)
+    out["gate_measured_admission"] = mgate
+    out["gate_measured_met"] = mgate >= 1.2
+
     # fused-round gate: one fused pass per scheduler round must run the
     # 512-request trace >= 3x faster than per-token replay (one patient
     # retry — the sim side is deterministic but host wall is not)
@@ -816,6 +911,9 @@ def main() -> None:
     print(f"gate: scheduler svm_aware evict/token reduction "
           f"{scgate:.2f}x (target >= 1.5x) -> "
           f"{'PASS' if out['gate_sched_met'] else 'FAIL'}")
+    print(f"gate: measured-admission tenant ratio {mgate:.2f}x "
+          f"(target >= 1.2x, ev/token no worse) -> "
+          f"{'PASS' if out['gate_measured_met'] else 'FAIL'}")
     print(f"gate: fused-round scheduler speedup {fgate:.2f}x "
           f"(target >= 3x) -> "
           f"{'PASS' if out['gate_sched_fused_met'] else 'FAIL'}")

@@ -23,6 +23,12 @@ FLOORS = {
     # fifo thrashing baseline on the oversubscribed 8-request mix
     # (deterministic simulation, measured ~2.0x)
     "gate_sched_evict_reduction": 1.5,
+    # measured working-set admission (docs/prefetching.md): peak
+    # concurrently active tenants under admit_by="measured" vs plan-bytes
+    # admission on the dense+MoE 8-request mix, zeroed unless
+    # evictions/token stays no worse — admitting more tenants by
+    # thrashing harder must trip the gate (deterministic, measured 3.0x)
+    "gate_measured_admission": 1.2,
     # fused round replay: one concatenated execute_fused pass per
     # scheduler round vs per-token reference replay, 512-request burst
     # mix over a pool with real tenant concurrency (measured ~4x)

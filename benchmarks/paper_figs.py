@@ -424,6 +424,60 @@ def beyond_driver():
     return rows
 
 
+def fig_measured_prefetch():
+    """Beyond-paper: measured prefetching vs the aggressive default on
+    the hot-set adversaries (docs/prefetching.md).  For each PR-6
+    adversary mode (static / dynamic / oscillating) the DOS sweep runs
+    twice — the paper's aggressive demand-everything policy
+    (``measured_pin=0``) and the measured policy that profiles the
+    trace's own touch columns and pins the measured hot set up-front
+    (``measured_pin=0.5``) — reproducing the thrashing cliff and showing
+    the measured policy flattening it.  One flat (mode × DOS × policy)
+    grid through the parallel sweep runner; the measured points share
+    the aggressive points' compiled traces (`trace_key` excludes the
+    pin axis).  Artifact: ``results/bench/fig_measured_prefetch.json``."""
+    modes = ("static", "dynamic", "oscillating")
+    pins = (("aggressive", 0.0), ("measured", 0.5))
+    grid = [78, 109, 125, 156]
+    stats = {}
+
+    def work():
+        points = [
+            SweepPoint.make("hotset", CAP * d / 100.0, CAP,
+                            wl_kwargs={"mode": m, "ops": 4096, "seed": 0},
+                            measured_pin=mp)
+            for m in modes for _, mp in pins for d in grid
+        ]
+        return run_sweep(points, jobs=JOBS, cache_dir=CACHE_DIR,
+                         stats=stats)
+
+    flat, us = _timed(work)
+    rows = [("fig_measured_grid", us,
+             f"computed={stats['computed']}_cached={stats['cached']}"
+             f"_jobs={JOBS}")]
+    art = {}
+    i = 0
+    for mode in modes:
+        curves = {}
+        for label, _ in pins:
+            curves[label] = {
+                d: {"throughput": flat[i + k]["throughput"],
+                    "evictions": flat[i + k]["evictions"],
+                    "e2m": round(flat[i + k]["evict_to_mig"], 3)}
+                for k, d in enumerate(grid)
+            }
+            i += len(grid)
+        art[mode] = curves
+        agg, mea = curves["aggressive"], curves["measured"]
+        cliff = mea[156]["throughput"] / max(agg[156]["throughput"], 1e-12)
+        ev_drop = (agg[156]["evictions"] - mea[156]["evictions"]) \
+            / max(agg[156]["evictions"], 1)
+        rows.append((f"fig_measured_{mode}", 0.0,
+                     f"cliff156={cliff:.2f}x_evdrop156={ev_drop:.2f}"))
+    _art("fig_measured_prefetch", art)
+    return rows
+
+
 def serve_scheduler():
     """Multi-tenant serving scheduler (beyond-paper, §5 direction): tail
     latency vs offered load per scheduling policy over one shared SVM
@@ -481,4 +535,5 @@ def serve_scheduler():
 
 ALL = (fig2_ranges, fig5_cost, fig6_dos, fig6_variants, fig7_profiles,
        fig8_9_density, fig10_thrashing, fig11_13_svm_aware,
-       table1_svm_vs_uvm, beyond_driver, serve_scheduler)
+       table1_svm_vs_uvm, beyond_driver, fig_measured_prefetch,
+       serve_scheduler)

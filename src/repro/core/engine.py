@@ -326,6 +326,20 @@ class CompiledTrace:
             cached[1] = cached[3].tolist()
         return cached[0], cached[1]
 
+    def touch_columns(self) -> tuple[np.ndarray, np.ndarray]:
+        """The whole-trace (op position, rid) touch columns — the access
+        log the hot-set estimator (`repro.svm.hotset`) profiles.  The
+        returned arrays are the trace's own (frozen) columns; callers
+        must treat them as read-only."""
+        return self.touch_pos_np, self.touch_rid_np
+
+    def touch_counts(self, minlength: int = 0) -> np.ndarray:
+        """Per-rid touch counts over the whole trace, as one `bincount`
+        pass over the rid column (index = absolute rid)."""
+        if not len(self.touch_rid_np):
+            return np.zeros(minlength, dtype=np.int64)
+        return np.bincount(self.touch_rid_np, minlength=minlength)
+
 
 def compile_trace(trace: Iterable, max_ops: int | None = None) -> CompiledTrace:
     """Lower a lazy op trace into flat columns.

@@ -75,6 +75,12 @@ class WeightStream:
             kw = {"prefetch": True}
             if nbytes[hot] <= budget // 2:
                 kw["pin"] = (paths[hot],)
+        elif mode == "measured":
+            # docs/prefetching.md: profile the first token's touch
+            # columns and pin only leaves above the touch-frequency
+            # threshold — the measured alternative to svm_aware's
+            # hand-picked pin + aggressive prefetch
+            kw = {"prefetch_mode": "measured"}
         elif mode == "zero_copy":
             # paper §4.2 hybrid placement: coldest (largest) leaves stay
             # host-resident at remote-access cost, up to half the weights
@@ -197,7 +203,8 @@ def main() -> None:
     ap.add_argument("--svm-policy", default="lrf",
                     choices=["lrf", "lru", "clock", "random"])
     ap.add_argument("--svm-mode", default="naive",
-                    choices=["naive", "svm_aware", "zero_copy"])
+                    choices=["naive", "svm_aware", "measured",
+                             "zero_copy"])
     ap.add_argument("--requests", type=int, default=1,
                     help="multi-tenant: N concurrent decode requests of "
                          "this model over one shared SVM pool (needs "
@@ -207,6 +214,12 @@ def main() -> None:
                          "process; 0 = all requests arrive at once)")
     ap.add_argument("--sched-policy", default="svm_aware",
                     choices=["fifo", "admission", "svm_aware"])
+    ap.add_argument("--admit-by", default="bytes",
+                    choices=["bytes", "measured"],
+                    help="what the admission watermark caps: total plan "
+                         "bytes, or the measured resident working set "
+                         "estimated from the spec's own touch columns "
+                         "(docs/prefetching.md)")
     ap.add_argument("--chaos", action="store_true",
                     help="inject the default seeded fault plan into the "
                          "multi-tenant schedule (capacity loss, slow "
@@ -291,6 +304,7 @@ def main() -> None:
                                      intensity=args.chaos_intensity)
         sched = run_schedule(
             [spec], args.requests, pool, policy=args.sched_policy,
+            admit_by=args.admit_by,
             seed=0, mean_interarrival_s=args.arrival,
             tokens=args.decode, evict_policy=args.svm_policy,
             fault_plan=plan, thrash_watermark=args.thrash_watermark)

@@ -17,6 +17,12 @@ from repro.svm.offload import (
     simulate_offload,
 )
 from repro.svm.faults import FaultEvent, FaultInjector, FaultPlan
+from repro.svm.hotset import (
+    HotSetProfile,
+    ProfileCache,
+    spec_profile,
+    token_trace,
+)
 from repro.svm.scheduler import (
     ModelSpec,
     PoolScheduler,
@@ -30,4 +36,6 @@ __all__ = ["plan_param_ranges", "plan_leaf_ranges", "tree_leaf_sizes",
            "OffloadPlan", "plan_offload", "record_offload",
            "simulate_offload", "ModelSpec", "PoolScheduler", "Request",
            "make_requests", "run_schedule",
-           "FaultPlan", "FaultEvent", "FaultInjector"]
+           "FaultPlan", "FaultEvent", "FaultInjector",
+           "HotSetProfile", "ProfileCache", "spec_profile",
+           "token_trace"]

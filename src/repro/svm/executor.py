@@ -47,9 +47,18 @@ import numpy as np
 
 from repro.core.costmodel import CostParams, TPU_V5E_HOST
 from repro.core.engine import CompiledTrace, TraceSession
+from repro.svm.hotset import HotSetProfile, token_trace
 from repro.svm.planner import ParamRanges, plan_param_ranges
 
 PyTree = Any
+
+#: streaming prefetch policies (docs/prefetching.md):
+#:   none       — pure demand paging
+#:   aggressive — stage every next layer (the paper's default; thrashes
+#:                under oversubscription)
+#:   measured   — profile the first token's touch columns and pin only
+#:                leaves above the touch-frequency threshold
+PREFETCH_MODES = ("none", "aggressive", "measured")
 
 
 class StreamingExecutor:
@@ -63,6 +72,9 @@ class StreamingExecutor:
                  cost_params: CostParams = TPU_V5E_HOST,
                  parallel_evict: bool = False,
                  prefetch: bool = False,
+                 prefetch_mode: str | None = None,
+                 hot_threshold: float = 2.0,
+                 hot_frac: float = 0.5,
                  pin: tuple[str, ...] = (),
                  zero_copy: tuple[str, ...] = (),
                  concurrency: int = 64,
@@ -90,7 +102,23 @@ class StreamingExecutor:
         # serving compute rate: from the cost model unless overridden
         self.compute_rate = (compute_rate if compute_rate is not None
                              else cost_params.serve_flops)
-        self.prefetch = prefetch
+        # prefetch policy: the bool flag keeps its historical meaning
+        # (True == "aggressive"); `prefetch_mode` supersedes it when set
+        if prefetch_mode is None:
+            prefetch_mode = "aggressive" if prefetch else "none"
+        if prefetch_mode not in PREFETCH_MODES:
+            raise ValueError(f"unknown prefetch_mode {prefetch_mode!r}; "
+                             f"available: {PREFETCH_MODES}")
+        self.prefetch_mode = prefetch_mode
+        self.prefetch = prefetch_mode == "aggressive"
+        # measured mode: hot = touched >= hot_threshold times per token,
+        # pinned bytes bounded to hot_frac of the pool (deadlock guard)
+        self.hot_threshold = float(hot_threshold)
+        self.hot_frac = float(hot_frac)
+        self.hot_profile: HotSetProfile | None = None
+        self.measured_hot_leaves: tuple[str, ...] = ()
+        self.measured_hot_bytes = 0
+        self._measured_done = prefetch_mode != "measured"
         self.concurrency = concurrency
         # every manager access goes through the session: record -> compile
         # segments -> replay (batched engine, or op-for-op when scalar).
@@ -248,6 +276,56 @@ class StreamingExecutor:
         t = self._device.get(path)
         return t if t is not None else jnp.asarray(self._flat[path])
 
+    # ------------------------------------------------- measured prefetch
+
+    def _measured_setup(self, layer_paths: Sequence[Sequence[str]]) -> None:
+        """First-decode measured-prefetch setup (docs/prefetching.md).
+
+        One token's fetch schedule is lowered to touch columns (pure —
+        no manager is driven) and profiled; leaves touched at least
+        ``hot_threshold`` times per token are the measured hot set.
+        Those leaves — byte-bounded to ``hot_frac`` of the pool, largest
+        frequency first, and never a leaf that would monopolise half the
+        pool — are migrated once and pinned via the session (OP_PIN
+        boundary ops, so scalar and batched replays stay byte-identical).
+        Everything else demand-pages: the measured policy prefetches
+        only what the touch columns prove is reused."""
+        if self._measured_done:
+            return
+        self._measured_done = True
+        plan = self.plan
+        ct = token_trace(plan.leaf_ranges, layer_paths,
+                         concurrency=self.concurrency, tokens=1)
+        size_arr = np.asarray([r.end - r.start
+                               for r in plan.space.ranges], dtype=np.int64)
+        prof = HotSetProfile.from_trace(ct, size_arr,
+                                        rid_base=plan.rid_base)
+        self.hot_profile = prof
+        freq = dict(zip(prof.rids.tolist(), prof.freq.tolist()))
+        cand = []
+        for path, rids in plan.leaf_ranges.items():
+            f = freq.get(rids[0] - plan.rid_base, 0)
+            nbytes = plan.leaf_bytes[path]
+            if f >= self.hot_threshold and nbytes <= self.mgr.capacity // 2:
+                cand.append((-f, path, nbytes, rids))
+        cand.sort()                      # frequency desc, then fetch order
+        budget = self.hot_frac * self.mgr.capacity
+        picked: list[str] = []
+        pinned_rids: list[int] = []
+        total = 0
+        for _, path, nbytes, rids in cand:
+            if total + nbytes > budget:
+                continue
+            total += nbytes
+            picked.append(path)
+            pinned_rids.extend(rids)
+        if pinned_rids:
+            for rid in pinned_rids:
+                self.session.pin(rid)
+            self.session.flush(("measured_pin", tuple(pinned_rids)))
+        self.measured_hot_leaves = tuple(picked)
+        self.measured_hot_bytes = total
+
     # --------------------------------------------------- decode hot path
 
     def decode_step(self, layer_paths: Sequence[Sequence[str]],
@@ -265,6 +343,7 @@ class StreamingExecutor:
 
         ``materialize=False`` skips device-pool upkeep (metrics-only
         simulation, e.g. riding along a real serving loop)."""
+        self._measured_setup(layer_paths)
         n = len(layer_paths)
         rate = self.compute_rate
         secs = tuple(f / rate for f in flops)
@@ -332,6 +411,7 @@ class StreamingExecutor:
         reference, so both fall back to the `decode_step` loop."""
         if steps <= 0:
             return
+        self._measured_setup(layer_paths)
         if self.prefetch or self.session.scalar or steps == 1:
             for _ in range(steps):
                 self.decode_step(layer_paths, flops,
@@ -391,6 +471,8 @@ class StreamingExecutor:
         s["overlap_hidden_s"] = self.overlap_hidden_s
         s["dos"] = self.plan.dos()
         s["compute_flops"] = self.compute_flops
+        s["prefetch_mode"] = self.prefetch_mode
+        s["measured_hot_bytes"] = self.measured_hot_bytes
         s.update(self.session.stats())
         return s
 

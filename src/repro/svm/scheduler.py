@@ -70,12 +70,21 @@ from repro.core.costmodel import CostParams, TPU_V5E_HOST
 from repro.core.ranges import DEFAULT_BASE
 from repro.ft.retry import RetryError, RetryPolicy, retry_call
 from repro.svm.faults import FaultInjector, FaultPlan
+from repro.svm.hotset import ProfileCache, spec_profile
 from repro.svm.planner import ParamRanges, plan_leaf_ranges
 
 PyTree = Any
 
 POLICIES = ("fifo", "admission", "svm_aware")
 ARRIVALS = ("burst", "poisson", "uniform")
+#: what the admission watermark caps (docs/prefetching.md):
+#:   bytes    — total plan bytes (the paper's baseline: admit by what a
+#:              tenant *allocates*)
+#:   measured — estimated resident working-set bytes from the tenant's
+#:              own touch columns (`repro.svm.hotset.spec_profile`):
+#:              admit by what it actually keeps resident, so sparse /
+#:              streaming tenants stop reserving room they never use
+ADMIT_MODES = ("bytes", "measured")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +164,50 @@ class ModelSpec:
             add(f"{arch}/l{i:03d}", layer_bytes)
         if embed_bytes:
             # tied head re-read: the embedding leaf is touched again
+            layer_paths.append((f"{arch}/embed",))
+            flops.append(2.0 * batch * (embed_bytes / 4.0))
+        return cls(arch=arch, leaves=tuple(leaves),
+                   layer_paths=tuple(layer_paths),
+                   flops_per_layer=tuple(flops))
+
+    @classmethod
+    def synthetic_moe(cls, arch: str, n_layers: int, layer_bytes: int, *,
+                      n_experts: int = 8, active_experts: int = 1,
+                      expert_bytes: int | None = None,
+                      embed_bytes: int = 0, batch: int = 1) -> "ModelSpec":
+        """A sparse mixture-of-experts decoder: per layer, one dense leaf
+        plus ``n_experts`` expert leaves of which only the first
+        ``active_experts`` are routed to (greedy decode with a fixed
+        router — deterministic, so the spec stays a pure data shape).
+
+        The inactive experts are *planned* (they count toward
+        ``total_bytes`` — the plan must hold them) but never appear in
+        ``layer_paths``, so they are never touched: plan bytes ≫ touched
+        bytes.  This is exactly the tenant shape plan-bytes admission
+        over-charges and measured admission (``admit_by="measured"``,
+        docs/prefetching.md) admits at its true resident cost."""
+        if not 0 <= active_experts <= n_experts:
+            raise ValueError(f"active_experts {active_experts} outside "
+                             f"[0, {n_experts}]")
+        eb = layer_bytes if expert_bytes is None else int(expert_bytes)
+        leaves: list[tuple[str, int]] = []
+        layer_paths: list[tuple[str, ...]] = []
+        flops: list[float] = []
+        if embed_bytes:
+            leaves.append((f"{arch}/embed", int(embed_bytes)))
+            layer_paths.append((f"{arch}/embed",))
+            flops.append(2.0 * batch * (embed_bytes / 4.0))
+        for i in range(n_layers):
+            dense = f"{arch}/l{i:03d}/dense"
+            leaves.append((dense, int(layer_bytes)))
+            routed = tuple(f"{arch}/l{i:03d}/e{j:02d}"
+                           for j in range(active_experts))
+            leaves.extend((f"{arch}/l{i:03d}/e{j:02d}", eb)
+                          for j in range(n_experts))
+            layer_paths.append((dense,) + routed)
+            layer_flops = (layer_bytes + active_experts * eb) / 4.0
+            flops.append(2.0 * batch * layer_flops)
+        if embed_bytes:
             layer_paths.append((f"{arch}/embed",))
             flops.append(2.0 * batch * (embed_bytes / 4.0))
         return cls(arch=arch, leaves=tuple(leaves),
@@ -278,7 +331,8 @@ class PoolScheduler:
     def __init__(self, capacity_bytes: int, *, policy: str = "svm_aware",
                  evict_policy: str = "lrf",
                  cost_params: CostParams = TPU_V5E_HOST,
-                 admit_watermark: float = 1.0, pin_frac: float = 0.25,
+                 admit_watermark: float = 1.0, admit_by: str = "bytes",
+                 pin_frac: float = 0.25,
                  concurrency: int = 64, compute_rate: float | None = None,
                  scalar: bool = False, fused: bool = True,
                  base: int = DEFAULT_BASE,
@@ -291,7 +345,11 @@ class PoolScheduler:
         if policy not in POLICIES:
             raise ValueError(f"unknown scheduling policy {policy!r}; "
                              f"available: {POLICIES}")
+        if admit_by not in ADMIT_MODES:
+            raise ValueError(f"unknown admit_by {admit_by!r}; "
+                             f"available: {ADMIT_MODES}")
         self.policy = policy
+        self.admit_by = admit_by
         self.capacity = capacity_bytes
         self.space = AddressSpace(capacity_bytes, base=base)
         self.mgr = SVMManager(self.space, policy=evict_policy,
@@ -313,7 +371,14 @@ class PoolScheduler:
         self.now = 0.0
         self.admitted_bytes = 0
         self.peak_admitted_bytes = 0
+        self.peak_active_requests = 0
         self.pinned_bytes_total = 0
+        # measured admission: per-spec profile + memoised admission cost
+        # (the cost is a pure function of (spec, nominal capacity), so
+        # the same number is added at admit and subtracted at retire /
+        # evacuate even if chaos resizes the live pool in between)
+        self._profile_cache = ProfileCache()
+        self._admit_cost_memo: dict[ModelSpec, int] = {}
         self._admit_seq = 0
         self._geometry: dict[ModelSpec, tuple] = {}
         self._plan_proto: dict[ModelSpec, ParamRanges] = {}
@@ -355,11 +420,33 @@ class PoolScheduler:
 
     # -------------------------------------------------------- admission
 
+    def _admit_cost(self, spec: ModelSpec) -> int:
+        """What a tenant charges against the admission watermark.
+
+        ``bytes`` mode: total plan bytes.  ``measured`` mode: the
+        estimated resident working set from the spec's own touch columns
+        (hot set + one streaming buffer, capped at plan bytes — a
+        measured cost must never exceed the allocation it measures).
+        Memoised per spec with the *nominal* capacity as the pressure
+        window, so the ledger adds and subtracts the identical number
+        for a tenant even when chaos resizes the live pool mid-flight,
+        and congruent tenants share one profile via the cache."""
+        if self.admit_by == "bytes":
+            return spec.total_bytes
+        cost = self._admit_cost_memo.get(spec)
+        if cost is None:
+            prof = spec_profile(spec, cache=self._profile_cache,
+                                concurrency=self.concurrency)
+            cost = min(spec.total_bytes,
+                       prof.resident_bytes(self.capacity))
+            self._admit_cost_memo[spec] = cost
+        return cost
+
     def _fits(self, spec: ModelSpec) -> bool:
         # admission probes the *effective* pool: a chaos capacity loss
         # (mgr.resize_capacity) tightens admission until it is restored
         cap = min(self.capacity, self.mgr.capacity)
-        return (self.admitted_bytes + spec.total_bytes
+        return (self.admitted_bytes + self._admit_cost(spec)
                 <= self.admit_watermark * cap)
 
     def _admit(self, queued: "deque[Request]",
@@ -409,10 +496,12 @@ class PoolScheduler:
             self._chaos["resumes"] += 1
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
-        self.admitted_bytes += req.spec.total_bytes
+        self.admitted_bytes += self._admit_cost(req.spec)
         self.peak_admitted_bytes = max(self.peak_admitted_bytes,
                                        self.admitted_bytes)
         active.append(req)
+        self.peak_active_requests = max(self.peak_active_requests,
+                                        len(active))
         if self.policy == "svm_aware":
             self._pin_hot_leaf(req)
 
@@ -643,7 +732,7 @@ class PoolScheduler:
             self.pinned_bytes_total -= req.pinned_bytes
             req.pinned_rids = ()
             req.pinned_bytes = 0
-        self.admitted_bytes -= req.spec.total_bytes
+        self.admitted_bytes -= self._admit_cost(req.spec)
         active.remove(req)
         if requeue:
             attempt = max(1, req.crashes + req.preemptions)
@@ -1037,7 +1126,7 @@ class PoolScheduler:
                                                    req.pinned_rids))
             self.pinned_bytes_total -= req.pinned_bytes
         req.finish_s = self.now
-        self.admitted_bytes -= req.spec.total_bytes
+        self.admitted_bytes -= self._admit_cost(req.spec)
         active.remove(req)
         done.append(req)
 
@@ -1165,9 +1254,12 @@ class PoolScheduler:
             chaos["injector"] = self.injector.stats()
         return {
             "policy": self.policy,
+            "admit_by": self.admit_by,
             "fused": self.fused,
             "capacity_bytes": self.capacity,
             "n_requests": len(done),
+            "peak_active_requests": self.peak_active_requests,
+            "profile_cache": self._profile_cache.stats(),
             "total_tokens": total_tokens,
             "makespan_s": self.now,
             "agg_tok_s": total_tokens / self.now if self.now else 0.0,

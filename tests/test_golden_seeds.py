@@ -1,0 +1,125 @@
+"""Golden digests of every seeded generation surface.
+
+Determinism ("same seed ⇒ same run") is load-bearing for the engine's
+byte-identity contract, the disk sweep cache, the chaos layer, and every
+committed bench gate — but a silent drift in any seeded generator (a
+refactor reordering RNG draws, a changed default) would pass all the
+*relative* equivalence tests while quietly invalidating the committed
+BENCH_engine.json numbers.  These tests pin the absolute content:
+sha256 digests of the canonical serialisation of
+
+  * `make_requests` under all three arrival processes,
+  * `FaultPlan.default` (the chaos gate's hazard schedule),
+  * the `HotSet` adversary's drawn touch sequence in all three modes.
+
+Regeneration (after an *intentional* generator change): run
+
+    PYTHONPATH=src python tests/test_golden_seeds.py
+
+and paste the printed ``GOLDEN`` block over the one below.  A failure
+here without an intentional change means committed bench results no
+longer describe what the code generates."""
+
+import hashlib
+
+import numpy as np
+
+import pytest
+
+from repro.core import GB, MB
+from repro.core.ranges import AddressSpace
+from repro.core.traces import HotSet
+from repro.svm import FaultPlan, ModelSpec, make_requests
+
+SPECS = [ModelSpec.synthetic("archA", 6, 2 * MB, embed_bytes=4 * MB),
+         ModelSpec.synthetic("archB", 4, 3 * MB, embed_bytes=2 * MB)]
+
+
+def _digest(parts) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, np.ndarray):
+            h.update(np.ascontiguousarray(p).tobytes())
+        else:
+            h.update(repr(p).encode())
+        h.update(b"|")
+    return h.hexdigest()[:16]
+
+
+def digest_requests(arrival: str, seed: int = 0) -> str:
+    reqs = make_requests(SPECS, 32, seed=seed, arrival=arrival,
+                         mean_interarrival_s=0.25, tokens=24,
+                         token_jitter=8, spec_choice="random")
+    return _digest((r.req_id, r.spec.arch, r.arrival_s, r.n_tokens)
+                   for r in reqs)
+
+
+def digest_faultplan(seed: int) -> str:
+    plan = FaultPlan.default(seed, n_requests=64, tokens=32)
+    return _digest((e.at_tokens, e.kind, e.frac, e.fail_attempts)
+                   for e in plan.events)
+
+
+def digest_hotset(mode: str, seed: int = 0) -> str:
+    space = AddressSpace(1 * GB, base=175 * MB)
+    wl = HotSet(int(1.25 * GB), mode=mode, ops=1024, seed=seed)
+    wl.build(space)
+    seq, bounds, comp = wl._sequence(space)
+    return _digest([seq, bounds, comp])
+
+
+SURFACES = {
+    "requests_burst": lambda: digest_requests("burst"),
+    "requests_poisson": lambda: digest_requests("poisson"),
+    "requests_uniform": lambda: digest_requests("uniform"),
+    "faultplan_seed0": lambda: digest_faultplan(0),
+    "faultplan_seed3": lambda: digest_faultplan(3),
+    "hotset_static": lambda: digest_hotset("static"),
+    "hotset_dynamic": lambda: digest_hotset("dynamic"),
+    "hotset_oscillating": lambda: digest_hotset("oscillating"),
+}
+
+# regenerate with:  PYTHONPATH=src python tests/test_golden_seeds.py
+GOLDEN = {
+    "requests_burst": "81c1e5dc3f96be39",
+    "requests_poisson": "036292edb7a51ed9",
+    "requests_uniform": "3afb0768fe92aad4",
+    "faultplan_seed0": "750d6fffbc94df49",
+    "faultplan_seed3": "6b5b1f9fcdb45daa",
+    "hotset_static": "f2ca059040e027e9",
+    "hotset_dynamic": "3b9bae72742853ec",
+    "hotset_oscillating": "67cc6430870ec90b",
+}
+
+
+@pytest.mark.parametrize("name", sorted(SURFACES))
+def test_golden_digest(name):
+    assert SURFACES[name]() == GOLDEN[name], (
+        f"seeded surface {name!r} drifted from its committed digest — "
+        "if the generator change was intentional, regenerate GOLDEN "
+        "(see module docstring) and re-run the bench smoke so "
+        "BENCH_engine.json matches what the code now generates")
+
+
+@pytest.mark.parametrize("name", sorted(SURFACES))
+def test_digest_stable_across_calls(name):
+    assert SURFACES[name]() == SURFACES[name]()
+
+
+def test_digest_sensitive_to_seed():
+    assert digest_requests("poisson", seed=1) != \
+        digest_requests("poisson", seed=0)
+    assert digest_faultplan(1) != digest_faultplan(0)
+    assert digest_hotset("dynamic", seed=1) != digest_hotset("dynamic")
+
+
+def test_arrival_processes_distinct():
+    seen = {digest_requests(a) for a in ("burst", "poisson", "uniform")}
+    assert len(seen) == 3
+
+
+if __name__ == "__main__":
+    print("GOLDEN = {")
+    for name in SURFACES:
+        print(f'    "{name}": "{SURFACES[name]()}",')
+    print("}")

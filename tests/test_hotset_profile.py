@@ -1,0 +1,311 @@
+"""Hot-set estimation and the measured prefetch/admission consumers.
+
+Covers: `HotSetProfile` estimator correctness against a brute-force
+per-op replay on small traces, the reuse-interval math and hot-set
+queries, congruent-tenant profile sharing through `ProfileCache`,
+`StreamingExecutor(prefetch_mode="measured")` (scalar ≡ batched ≡ fused
+byte-identity, determinism, eviction reduction vs naive),
+`simulate(measured_pin=...)` engine identity on the hot-set adversaries,
+and `PoolScheduler(admit_by="measured")` — the conservation contract,
+the co-admission win on the dense+MoE gate mix, and tier identity."""
+
+import numpy as np
+import pytest
+
+from repro.core import MB
+from repro.core.sweep import SweepPoint, run_point
+from repro.svm import (
+    HotSetProfile,
+    ModelSpec,
+    ProfileCache,
+    StreamingExecutor,
+    run_schedule,
+    spec_profile,
+    token_trace,
+)
+from repro.svm.planner import plan_leaf_ranges
+
+
+def brute_force_profile(rid_seq, size_arr):
+    """Per-op reference: frequencies and reuse intervals by replaying the
+    touch sequence one op at a time."""
+    freq: dict = {}
+    last_pos: dict = {}
+    gaps: dict = {}
+    for i, rid in enumerate(rid_seq):
+        rid = int(rid)
+        freq[rid] = freq.get(rid, 0) + 1
+        if rid in last_pos:
+            between = sum(int(size_arr[int(r)])
+                          for r in rid_seq[last_pos[rid] + 1:i])
+            gaps.setdefault(rid, []).append(between)
+        last_pos[rid] = i
+    return freq, gaps
+
+
+# ------------------------------------------------------------- estimator
+
+def test_profile_matches_brute_force():
+    rng = np.random.default_rng(3)
+    size_arr = rng.integers(1, 100, size=16).astype(np.int64)
+    rid_seq = rng.integers(0, 16, size=200).astype(np.int64)
+    prof = HotSetProfile.from_touches(rid_seq, size_arr)
+    freq, gaps = brute_force_profile(rid_seq, size_arr)
+    assert prof.n_touches == 200
+    for i, rid in enumerate(prof.rids.tolist()):
+        assert prof.freq[i] == freq[rid]
+        assert prof.sizes[i] == size_arr[rid]
+        if rid in gaps:
+            assert prof.reuse_min[i] == min(gaps[rid])
+            assert prof.reuse_mean[i] == pytest.approx(
+                sum(gaps[rid]) / len(gaps[rid]))
+        else:
+            assert np.isinf(prof.reuse_min[i])
+            assert np.isinf(prof.reuse_mean[i])
+    all_gaps = [g for gs in gaps.values() for g in gs]
+    assert int(prof.reuse_hist.sum()) == len(all_gaps)
+    assert prof.touched_bytes == int(
+        size_arr[np.unique(rid_seq)].sum())
+
+
+def test_profile_empty_and_single():
+    size_arr = np.array([10, 20], dtype=np.int64)
+    empty = HotSetProfile.from_touches(np.zeros(0, dtype=np.int64),
+                                       size_arr)
+    assert empty.n_touches == 0 and len(empty.rids) == 0
+    assert empty.hot_bytes(1 << 30) == 0
+    assert empty.resident_bytes(1 << 30) == 0
+    one = HotSetProfile.from_touches(np.array([1]), size_arr)
+    # a once-touched rid never demonstrates reuse: cold at any pressure,
+    # but it still needs its streaming buffer
+    assert one.hot_bytes(1 << 30) == 0
+    assert one.resident_bytes(1 << 30) == 20
+
+
+def test_hot_set_queries():
+    # rid 0 re-touches with 50 bytes in between, rid 1 with 40, rid 2
+    # with 30; rid 3 is touched once (infinite reuse interval)
+    rid_seq = np.array([0, 1, 2, 0, 1, 2, 0, 3])
+    sizes = np.array([10, 20, 30, 40, 50], dtype=np.int64)
+    p = HotSetProfile.from_touches(rid_seq, sizes)
+    assert p.freq.tolist() == [3, 2, 2, 1]
+    assert p.reuse_mean[:3].tolist() == [50.0, 40.0, 30.0]
+    # window 40: rids 1 and 2 are hot (20 + 30 bytes); the largest cold
+    # range (rid 3, 40 bytes) is the streaming buffer
+    assert p.hot_mask(40).tolist() == [False, True, True, False]
+    assert p.hot_bytes(40) == 50
+    assert p.resident_bytes(40) == 90
+    # selection: frequency-descending prefix under the byte budget
+    assert p.select_hot_rids(40, 100).tolist() == [1, 2]
+    assert p.select_hot_rids(40, 25).tolist() == [1]
+    assert p.select_hot_rids(40, 5).tolist() == []
+
+
+def test_profile_relative_rids_congruent():
+    """Profiles are relative to rid_base: congruent layouts at different
+    offsets produce identical profiles."""
+    size_arr = np.concatenate([np.arange(1, 9), np.arange(1, 9)]
+                              ).astype(np.int64)
+    seq = np.array([0, 1, 2, 0, 1, 2], dtype=np.int64)
+    p0 = HotSetProfile.from_touches(seq, size_arr, rid_base=0)
+    p8 = HotSetProfile.from_touches(seq + 8, size_arr, rid_base=8)
+    assert p0.rids.tolist() == p8.rids.tolist()
+    assert p0.freq.tolist() == p8.freq.tolist()
+    assert p0.sizes.tolist() == p8.sizes.tolist()
+    assert p0.reuse_mean.tolist() == p8.reuse_mean.tolist()
+
+
+def test_profile_arrays_frozen():
+    p = HotSetProfile.from_touches(np.array([0, 1, 0]),
+                                   np.array([4, 8], dtype=np.int64))
+    with pytest.raises(ValueError):
+        p.freq[0] = 99
+
+
+def test_token_trace_profiles_fetch_schedule():
+    spec = ModelSpec.synthetic("t", 4, 1 * MB, embed_bytes=2 * MB)
+    plan = plan_leaf_ranges(list(spec.leaves), spec.total_bytes)
+    ct = token_trace(plan.leaf_ranges, spec.layer_paths, tokens=2)
+    per_token = sum(len(plan.leaf_ranges[p])
+                    for paths in spec.layer_paths for p in paths)
+    assert len(ct.touch_rid_np) == 2 * per_token
+    # touch_columns is the exported read-only view the profiler uses
+    pos, rid = ct.touch_columns()
+    assert rid is ct.touch_rid_np and pos is ct.touch_pos_np
+    counts = ct.touch_counts(minlength=len(plan.space.ranges))
+    assert int(counts.sum()) == len(rid)
+
+
+def test_spec_profile_shared_via_cache():
+    spec = ModelSpec.synthetic("archA", 4, 1 * MB, embed_bytes=2 * MB)
+    cache = ProfileCache()
+    p1 = spec_profile(spec, cache=cache)
+    p2 = spec_profile(spec, cache=cache)
+    assert p1 is p2
+    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+    # embed is touched first and last per token: highest frequency
+    order = np.argsort(-p1.freq, kind="stable")
+    embed_rids = plan_leaf_ranges(
+        list(spec.leaves), spec.total_bytes).leaf_ranges["archA/embed"]
+    assert int(p1.rids[order[0]]) in [r for r in embed_rids]
+
+
+def test_moe_spec_untouched_experts_cost_nothing():
+    """The measured resident estimate of a sparse MoE spec excludes the
+    never-routed experts — the whole point of measuring."""
+    moe = ModelSpec.synthetic_moe("moe", 4, 1 * MB, n_experts=8,
+                                  active_experts=1, embed_bytes=2 * MB)
+    prof = spec_profile(moe)
+    touched = prof.touched_bytes
+    # embed + per layer (dense + 1 routed expert)
+    assert touched == (2 + 4 * 2) * MB
+    assert prof.resident_bytes(moe.total_bytes) <= touched + 1 * MB
+    assert moe.total_bytes == (2 + 4 * 9) * MB
+
+
+# ------------------------------------------- measured executor prefetch
+
+def _exec_params(n_layers=6, leaf_kb=256, embed_kb=512):
+    p = {"embed": np.ones(embed_kb * 256, np.float32)}
+    for i in range(n_layers):
+        p[f"layer{i}"] = np.ones(leaf_kb * 256, np.float32)
+    return p
+
+
+_LAYER_PATHS = ([["embed"]] + [[f"layer{i}"] for i in range(6)]
+                + [["embed"]])
+_FLOPS = [1e9] * len(_LAYER_PATHS)
+
+
+def _run_measured(mode="measured", scalar=False, steps=6, fused=False):
+    ex = StreamingExecutor(_exec_params(), hbm_budget=1 << 20,
+                           prefetch_mode=mode, scalar=scalar)
+    if fused:
+        ex.decode_steps(_LAYER_PATHS, _FLOPS, steps, materialize=False)
+    else:
+        for _ in range(steps):
+            ex.decode_step(_LAYER_PATHS, _FLOPS, materialize=False)
+    return ex
+
+
+def test_measured_mode_pins_hot_leaf():
+    ex = _run_measured()
+    # embed is touched twice per token — above the threshold; the equal
+    # layers are touched once and stay demand-paged
+    assert ex.measured_hot_leaves == ("embed",)
+    assert ex.measured_hot_bytes == 512 * 1024
+    m = ex.metrics()
+    assert m["prefetch_mode"] == "measured"
+    assert m["measured_hot_bytes"] == 512 * 1024
+    naive = _run_measured(mode="none").metrics()
+    assert m["evictions"] < naive["evictions"]
+
+
+def test_measured_mode_scalar_batched_fused_identical():
+    mb = _run_measured(scalar=False).metrics()
+    ms = _run_measured(scalar=True).metrics()
+    mf = _run_measured(fused=True).metrics()
+    for k in ("wall_s", "evictions", "migrations", "bytes_migrated",
+              "bytes_evicted", "measured_hot_bytes"):
+        assert mb[k] == ms[k] == mf[k], k
+
+
+def test_measured_mode_deterministic():
+    a = _run_measured().metrics()
+    b = _run_measured().metrics()
+    for k in ("wall_s", "evictions", "migrations", "bytes_migrated"):
+        assert a[k] == b[k], k
+
+
+def test_prefetch_mode_validation_and_bool_compat():
+    with pytest.raises(ValueError, match="prefetch_mode"):
+        StreamingExecutor(_exec_params(), 1 << 20, prefetch_mode="bogus")
+    ex = StreamingExecutor(_exec_params(), 1 << 20, prefetch=True)
+    assert ex.prefetch_mode == "aggressive" and ex.prefetch
+    ex = StreamingExecutor(_exec_params(), 1 << 20)
+    assert ex.prefetch_mode == "none" and not ex.prefetch
+
+
+# ----------------------------------------------- measured_pin simulate
+
+def test_measured_pin_sweep_axis_engine_identity():
+    GB = 1 << 30
+    kw = dict(wl_kwargs={"mode": "static", "ops": 2048, "seed": 0},
+              measured_pin=0.5)
+    rb = run_point(SweepPoint.make("hotset", 2 * GB, 1 * GB, **kw))
+    rs = run_point(SweepPoint.make("hotset", 2 * GB, 1 * GB,
+                                   engine="scalar", **kw))
+    assert rb == rs
+    r0 = run_point(SweepPoint.make(
+        "hotset", 2 * GB, 1 * GB,
+        wl_kwargs={"mode": "static", "ops": 2048, "seed": 0}))
+    # pinning the measured hot set must reduce eviction churn on the
+    # static adversary (the bench figure's headline)
+    assert rb["evictions"] < r0["evictions"]
+
+
+# ------------------------------------------------- measured admission
+
+MOE_SPECS = [
+    ModelSpec.synthetic("archA", 8, 3 * MB, embed_bytes=6 * MB),
+    ModelSpec.synthetic_moe("moeB", 12, 1 * MB, n_experts=8,
+                            expert_bytes=2 * MB, active_experts=1,
+                            embed_bytes=4 * MB),
+]
+MOE_CAP = 100 * MB
+
+
+def _run_admit(admit_by, **kw):
+    return run_schedule(MOE_SPECS, 8, MOE_CAP, policy="svm_aware",
+                        seed=7, tokens=8, spec_choice="roundrobin",
+                        pin_frac=0.4, admit_by=admit_by, **kw)
+
+
+def test_measured_admission_co_admits_more_tenants():
+    by = _run_admit("bytes")
+    me = _run_admit("measured")
+    assert me["admit_by"] == "measured"
+    assert me["peak_active_requests"] >= 2 * by["peak_active_requests"]
+    # ...without thrashing harder: the gate's honesty condition
+    assert me["evictions_per_token"] <= \
+        by["evictions_per_token"] * 1.05 + 1e-9
+    # congruent tenants shared profiles: 2 distinct specs, 8 requests
+    assert me["profile_cache"]["entries"] == 2
+    assert me["profile_cache"]["misses"] == 2
+
+
+def test_measured_admission_conservation():
+    r = _run_admit("measured")
+    c, m = r["conservation"], r["mgr"]
+    assert c["svm_wall_s"] == pytest.approx(m["wall_s"], abs=1e-9)
+    assert c["migrations"] == m["migrations"]
+    assert c["evictions"] == m["evictions"]
+    assert c["bytes_migrated"] == m["bytes_migrated"]
+    assert c["bytes_evicted"] == m["bytes_evicted"]
+
+
+def test_measured_admission_tier_identity_and_determinism():
+    runs = [_run_admit("measured"),
+            _run_admit("measured"),
+            _run_admit("measured", fused=False),
+            _run_admit("measured", scalar=True)]
+    for k in ("makespan_s", "evictions", "migrations", "agg_tok_s",
+              "peak_active_requests", "total_tokens"):
+        vals = {repr(r[k]) for r in runs}
+        assert len(vals) == 1, (k, vals)
+
+
+def test_admit_by_validation():
+    with pytest.raises(ValueError, match="admit_by"):
+        run_schedule(MOE_SPECS, 2, MOE_CAP, admit_by="bogus")
+
+
+def test_measured_cost_capped_at_plan_bytes():
+    """A dense spec whose whole working set is hot must not charge more
+    than its plan bytes."""
+    from repro.svm.scheduler import PoolScheduler
+    sched = PoolScheduler(MOE_CAP, admit_by="measured")
+    dense = MOE_SPECS[0]
+    assert sched._admit_cost(dense) <= dense.total_bytes
+    moe = MOE_SPECS[1]
+    assert sched._admit_cost(moe) < moe.total_bytes // 4
